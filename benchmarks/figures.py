@@ -1,0 +1,427 @@
+"""One benchmark per paper figure/table.  Every function returns a dict of
+results (also printed as CSV by benchmarks.run) and is deterministic."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (PAPER, SNIC, ChainProgram, EventSim, NTDag, NTSpec,
+                        SNICConfig, make_rack, rack_analysis)
+from repro.core.consolidation import (analyze, fb_kv_load_trace,
+                                      synthetic_trace)
+from repro.core.sim import MS, US, fb_kv_source, poisson_source
+
+
+def _specs(names, gbps=100.0, fixed=500.0):
+    return {n: NTSpec(n, max_gbps=gbps, fixed_ns=fixed) for n in names}
+
+
+def _chain_dag(uid, tenant, names):
+    return NTDag(uid, tenant, ((tuple(names),),))
+
+
+# ======================================================== Fig 2: disagg =====
+def fig2_consolidation_disagg() -> dict:
+    """Fig 2: disaggregated-memory traffic — sum-of-peaks vs aggregate
+    (paper: 1.1x-2.4x savings with five endhosts)."""
+    out = {}
+    for wname, kw in [("wordcount", dict(burst_prob=0.05, peak=30)),
+                      ("terasort", dict(burst_prob=0.12, peak=45)),
+                      ("pagerank", dict(burst_prob=0.08, peak=25)),
+                      ("memcached", dict(burst_prob=0.20, peak=15))]:
+        loads = synthetic_trace(5, 600, seed=hash(wname) % 2 ** 31, **kw)
+        rep = analyze(loads)
+        out[f"{wname}_savings"] = round(rep.savings, 2)
+    vals = list(out.values())
+    out["range"] = f"{min(vals):.1f}x-{max(vals):.1f}x"
+    return out
+
+
+# ================================================= Fig 3: FB/Alibaba-like ====
+def fig3_consolidation_dc() -> dict:
+    """Fig 3: rack- and DC-level consolidation, orders of magnitude."""
+    out = {}
+    for dc, n, kw in [("fb_web", 240, dict(burst_prob=0.04, peak=60, base=1.2)),
+                      ("fb_cache", 240, dict(burst_prob=0.10, peak=40)),
+                      ("alibaba", 320, dict(burst_prob=0.06, peak=50,
+                                            diurnal=True))]:
+        loads = synthetic_trace(n, 400, seed=len(dc), **kw)
+        r = rack_analysis(loads, rack_size=8)
+        out[f"{dc}_rack_saving"] = round(r["rack_saving"], 1)
+        out[f"{dc}_global_saving"] = round(r["global_saving"], 1)
+    return out
+
+
+# ===================================================== Fig 8-10: YCSB KV ====
+def fig8_9_ycsb(n_ops: int = 30_000) -> dict:
+    """Fig 8/9: YCSB latency & throughput across systems."""
+    from repro.serving.kv_store import run_ycsb
+    out = {}
+    for wl in ("A", "B", "C"):
+        for system in ("clio", "clio-snic", "clio-snic-cache"):
+            r = run_ycsb(system, workload=wl, n_ops=n_ops,
+                         n_keys=100_000, cache_entries=4096)
+            key = f"{system}_{wl}"
+            out[f"{key}_avg_us"] = round(r.avg_us, 2)
+            out[f"{key}_kops"] = round(r.kops(r.done_ns), 1)
+            if system == "clio-snic-cache":
+                out[f"{key}_hit_rate"] = round(
+                    r.hits / max(r.hits + r.misses, 1), 3)
+    return out
+
+
+def fig10_replication(n_ops: int = 20_000) -> dict:
+    """Fig 10: replicated writes — sNIC replication NT vs client-side."""
+    from repro.serving.kv_store import run_ycsb
+    out = {}
+    for wl in ("A", "B"):
+        base = run_ycsb("clio", workload=wl, n_ops=n_ops, replication=2)
+        snic = run_ycsb("clio-snic-repl", workload=wl, n_ops=n_ops,
+                        replication=2)
+        none = run_ycsb("clio", workload=wl, n_ops=n_ops, replication=1)
+        out[f"clio_repl_{wl}_avg_us"] = round(base.avg_us, 2)
+        out[f"snic_repl_{wl}_avg_us"] = round(snic.avg_us, 2)
+        out[f"clio_norepl_{wl}_avg_us"] = round(none.avg_us, 2)
+        out[f"repl_overhead_snic_{wl}"] = round(
+            snic.avg_us / none.avg_us - 1, 3)
+        out[f"repl_overhead_clio_{wl}"] = round(
+            base.avg_us / none.avg_us - 1, 3)
+    return out
+
+
+# ========================================================== Fig 11: VPC =====
+def fig11_vpc() -> dict:
+    """Fig 11: firewall->NAT->encrypt chain throughput.
+
+    Baselines: per-packet python loop ("OVS"), unjitted vectorized
+    ("OVS-DPDK"); sNIC = one fused jitted chain."""
+    import jax.numpy as jnp
+
+    from repro.serving.vpc import (chacha20_xor_jnp, firewall, make_packets,
+                                   make_rules, nat_rewrite, vpc_chain)
+    out = {}
+    rules = make_rules(32)
+    key = jnp.arange(8, dtype=jnp.uint32)
+    nonce = jnp.arange(3, dtype=jnp.uint32)
+    for n in (2048, 8192):
+        headers, payload = make_packets(n)
+        # warm
+        vpc_chain(headers, payload, rules, key, nonce)[2].block_until_ready()
+        t0 = time.time()
+        reps = 5
+        for _ in range(reps):
+            _, _, ct = vpc_chain(headers, payload, rules, key, nonce)
+        ct.block_until_ready()
+        dt = (time.time() - t0) / reps
+        gbps = n * 64 * 8 / dt / 1e9
+        out[f"snic_fused_{n}_gbps"] = round(gbps, 3)
+        # "DPDK": separate dispatches, no fusion
+        t0 = time.time()
+        for _ in range(reps):
+            allow = firewall(headers, rules)
+            newh = nat_rewrite(headers, 0x0A000001)
+            ct = chacha20_xor_jnp(payload, key, nonce)
+        ct.block_until_ready()
+        dt = (time.time() - t0) / reps
+        out[f"dpdk_unfused_{n}_gbps"] = round(n * 64 * 8 / dt / 1e9, 3)
+        # "OVS": per-packet loop (tiny sample, extrapolated)
+        sample = 64
+        t0 = time.time()
+        for i in range(sample):
+            firewall(headers[i:i + 1], rules)
+            nat_rewrite(headers[i:i + 1], 0x0A000001)
+            chacha20_xor_jnp(payload[i:i + 1], key, nonce)
+        dt = (time.time() - t0) / sample * n
+        out[f"ovs_perpkt_{n}_mbps"] = round(n * 64 * 8 / dt / 1e6, 3)
+    return out
+
+
+# ============================================ Fig 12/13: FB consolidation ====
+def fig12_13_fb_consolidation(dur_ms: float = 40.0) -> dict:
+    """Fig 12/13: four endhosts consolidated on one sNIC vs per-endhost NTs,
+    FB-KV-trace-like traffic, firewall+NAT NTs.
+
+    Calibration: the paper reports the workload's median/95p load as
+    24/32 Gbps for the *aggregate* of four senders ("aggregated load is
+    mostly under 100 Gbps but often exceeds 40 Gbps"), so each endhost runs
+    the FB-KV source at scale 0.5 (aggregate ~49 Gbps mean, matching the 18% loss the paper reports at a 40G uplink)."""
+    out = {}
+    SC = 0.5   # ~12 Gbps mean per endhost -> ~49 Gbps aggregate (see docstring)
+    specs = _specs(["FW", "NAT"], gbps=100.0, fixed=300.0)
+    for uplink in (100.0, 40.0):
+        # --- baseline: every endhost has its own NTs and a direct link
+        base_tput = 0.0
+        for e in range(4):
+            sim = EventSim()
+            nic = SNIC(sim, SNICConfig(uplink_gbps=uplink, enable_drf=False,
+                                       enable_autoscale=False), specs)
+            nic.deploy([_chain_dag(1, f"e{e}", ("FW", "NAT"))])
+            sim.run(PAPER.PR_NS + 1)
+            t0 = sim.now
+            fb_kv_source(sim, tenant=f"e{e}", dag_uid=1, sink=nic.inject,
+                         seed=e, scale=SC, until_ns=t0 + dur_ms * MS)
+            sim.run(t0 + dur_ms * MS)
+            base_tput += nic.stats[f"e{e}"].gbps(dur_ms * MS)
+        # --- consolidated: four endhosts share one sNIC
+        sim = EventSim()
+        nic = SNIC(sim, SNICConfig(uplink_gbps=uplink, enable_drf=True,
+                                   enable_autoscale=True), specs)
+        nic.deploy([_chain_dag(e + 1, f"e{e}", ("FW", "NAT"))
+                    for e in range(4)])
+        sim.run(PAPER.PR_NS + 1)
+        t0 = sim.now
+        for e in range(4):
+            fb_kv_source(sim, tenant=f"e{e}", dag_uid=e + 1, sink=nic.inject,
+                         seed=e, scale=SC, until_ns=t0 + dur_ms * MS)
+        sim.run(t0 + dur_ms * MS)
+        cons_tput = nic.total_gbps(dur_ms * MS)
+        out[f"baseline_{int(uplink)}G_gbps"] = round(base_tput, 2)
+        out[f"snic_{int(uplink)}G_gbps"] = round(cons_tput, 2)
+        out[f"overhead_{int(uplink)}G"] = round(1 - cons_tput / base_tput, 3)
+    # Fig 13: FPGA area x time saving vs per-endhost NTs (sampled)
+    from repro.core.regions import RegionState
+    for fw_gbps, aes_gbps, label in ((100.0, 100.0, "fast_nt"),
+                                     (100.0, 30.0, "fw100_aes30"),
+                                     (20.0, 20.0, "slow20")):
+        sim = EventSim()
+        sp = {"FW": NTSpec("FW", max_gbps=fw_gbps, fixed_ns=300.0),
+              "AES": NTSpec("AES", max_gbps=aes_gbps, fixed_ns=300.0)}
+        nic = SNIC(sim, SNICConfig(uplink_gbps=100.0, n_regions=12), sp)
+        nic.deploy([_chain_dag(e + 1, f"e{e}", ("FW", "AES"))
+                    for e in range(4)])
+        sim.run(PAPER.PR_NS + 1)
+        t0 = sim.now
+        for e in range(4):
+            fb_kv_source(sim, tenant=f"e{e}", dag_uid=e + 1, sink=nic.inject,
+                         seed=e, scale=SC, until_ns=t0 + dur_ms * MS)
+        samples = []
+
+        def sample():
+            n = sum(len(r.instances) for r in nic.regions.regions
+                    if r.state == RegionState.ACTIVE)
+            samples.append(n)
+            if sim.now < t0 + dur_ms * MS:
+                sim.after(1.0 * MS, sample)
+        sim.after(1.0 * MS, sample)
+        sim.run(t0 + dur_ms * MS)
+        area_time = sum(samples) / max(len(samples), 1)
+        baseline_nts = 4 * 2                        # per-endhost FW+AES
+        out[f"saving_{label}"] = round(1 - area_time / baseline_nts, 3)
+    return out
+
+
+# ================================================= Fig 14: credits/tput =====
+def fig14_credits(dur_ms: float = 3.0) -> dict:
+    """Fig 14: throughput vs initial credits and packet size."""
+    out = {}
+    specs = _specs(["NT1"], gbps=100.0, fixed=500.0)
+    for credits in (1, 2, 4, 8):
+        for size in (512, 1024, 1500):
+            sim = EventSim()
+            nic = SNIC(sim, SNICConfig(credits=credits, enable_drf=False,
+                                       enable_autoscale=False), specs)
+            nic.deploy([_chain_dag(1, "u", ("NT1",))])
+            sim.run(PAPER.PR_NS + 1)
+            t0 = sim.now
+            poisson_source(sim, rate_gbps=99.0, mean_bytes=size, tenant="u",
+                           dag_uid=1, sink=nic.inject, seed=1,
+                           until_ns=t0 + dur_ms * MS)
+            sim.run(t0 + dur_ms * MS)
+            out[f"c{credits}_s{size}_gbps"] = round(
+                nic.stats["u"].gbps(dur_ms * MS), 1)
+    return out
+
+
+# ================================================= Fig 15: NT chaining ======
+def fig15_chaining(dur_ms: float = 2.0) -> dict:
+    """Fig 15: latency vs chain length: sNIC chain / half-chain / PANIC."""
+    out = {}
+    for n in range(2, 8):
+        names = tuple(f"NT{i}" for i in range(1, n + 1))
+        specs = _specs(names, gbps=100.0, fixed=500.0)
+        for scheme in ("snic", "half", "panic"):
+            sim = EventSim()
+            mode = "panic" if scheme == "panic" else "snic"
+            nic = SNIC(sim, SNICConfig(mode=mode, region_slots=8,
+                                       enable_drf=False,
+                                       enable_autoscale=False), specs)
+            if scheme == "half":
+                h = n // 2
+                progs = [ChainProgram(names[:h]), ChainProgram(names[h:])]
+            else:
+                progs = [ChainProgram(names)]
+            nic.deploy([_chain_dag(1, "u", names)], programs=progs)
+            sim.run(PAPER.PR_NS * (len(progs)) + 1)
+            t0 = sim.now
+            poisson_source(sim, rate_gbps=40.0, mean_bytes=1000, tenant="u",
+                           dag_uid=1, sink=nic.inject, seed=2,
+                           until_ns=t0 + dur_ms * MS)
+            sim.run(t0 + 2 * dur_ms * MS)
+            out[f"{scheme}_n{n}_us"] = round(
+                nic.stats["u"].mean_latency_us(), 2)
+    return out
+
+
+# ============================================ Fig 16: NT-level parallelism ==
+def fig16_parallelism(dur_ms: float = 2.0) -> dict:
+    """Fig 16: latency of n independent NTs run serial / half / parallel."""
+    out = {}
+    for n in (2, 4, 6):
+        names = tuple(f"NT{i}" for i in range(1, n + 1))
+        specs = _specs(names, gbps=50.0, fixed=2000.0)
+        cases = {
+            "serial": NTDag(1, "u", ((names,),)),
+            "half": NTDag(1, "u", ((names[:n // 2], names[n // 2:]),)),
+            "parallel": NTDag(1, "u", (tuple((x,) for x in names),)),
+        }
+        for label, dag in cases.items():
+            sim = EventSim()
+            nic = SNIC(sim, SNICConfig(region_slots=8, n_regions=8,
+                                       enable_drf=False,
+                                       enable_autoscale=False), specs)
+            nic.deploy([dag])
+            sim.run(PAPER.PR_NS * 8 + 1)
+            t0 = sim.now
+            poisson_source(sim, rate_gbps=10.0, mean_bytes=1000, tenant="u",
+                           dag_uid=1, sink=nic.inject, seed=3,
+                           until_ns=t0 + dur_ms * MS)
+            sim.run(t0 + 2 * dur_ms * MS)
+            out[f"{label}_n{n}_us"] = round(
+                nic.stats["u"].mean_latency_us(), 2)
+    return out
+
+
+# ======================================= Fig 17: DRF + autoscale timeline ===
+def fig17_drf_autoscale() -> dict:
+    """Fig 17: two tenants sharing NT2; user2's load steps up; DRF
+    reallocates within an epoch; sustained overload scales NT2 out after
+    MONITOR_PERIOD + PR, lifting both tenants."""
+    # the paper's Fig 6 uses abstract throughput "units" (NT1/NT2 = 10,
+    # NT3 = 7); we set 1 unit = 10 Mbps so the 40 ms timeline stays at a
+    # tractable event count while every policy decision is ratio-driven.
+    UNIT = 0.01  # Gbps
+    specs = {"NT1": NTSpec("NT1", max_gbps=10 * UNIT, fixed_ns=300.0),
+             "NT2": NTSpec("NT2", max_gbps=10 * UNIT, fixed_ns=300.0),
+             "NT3": NTSpec("NT3", max_gbps=7 * UNIT, fixed_ns=300.0)}
+    sim = EventSim()
+    nic = SNIC(sim, SNICConfig(n_regions=3, region_slots=2,
+                               enable_drf=True, enable_autoscale=True,
+                               ingress_floor_gbps=0.5 * UNIT,
+                               # rates are scaled down 100x from the paper's
+                               # 100G links, so the DRF epoch scales up to
+                               # keep >> 1 packet per epoch (paper: ~1 RTT)
+                               epoch_ns=1.0 * MS),
+               specs)
+    nic.log_tput = True
+    nic.deploy([_chain_dag(1, "u1", ("NT1", "NT2")),
+                _chain_dag(2, "u2", ("NT3", "NT2"))])
+    sim.run(PAPER.PR_NS * 2 + 1)
+    t0 = sim.now
+    dur = 40.0 * MS
+    poisson_source(sim, rate_gbps=5 * UNIT, mean_bytes=1000, tenant="u1",
+                   dag_uid=1, sink=nic.inject, seed=4, until_ns=t0 + dur)
+    # user2 load steps up at t0+5ms (Fig 6's second step)
+    poisson_source(sim, rate_gbps=2 * UNIT, mean_bytes=1000, tenant="u2",
+                   dag_uid=2, sink=nic.inject, seed=5,
+                   until_ns=t0 + 5 * MS)
+    poisson_source(sim, rate_gbps=9 * UNIT, mean_bytes=1000, tenant="u2",
+                   dag_uid=2, sink=nic.inject, seed=6,
+                   start_ns=t0 + 5 * MS, until_ns=t0 + dur)
+    sim.run(t0 + dur)
+    # bucket NT2 throughput per tenant per 5ms, reported in units
+    buckets: dict = {}
+    for (t, tenant, nt, nbytes) in nic.tput_log:
+        if nt != "NT2":
+            continue
+        b = int((t - t0) // (5 * MS))
+        buckets.setdefault(b, {}).setdefault(tenant, 0)
+        buckets[b][tenant] += nbytes
+    out = {}
+    for b in sorted(buckets):
+        for tenant, nb in sorted(buckets[b].items()):
+            out[f"t{b * 5}ms_{tenant}_units"] = round(
+                nb / (5 * MS) * 8 / UNIT, 2)
+    n_nt2 = len(nic.regions.by_name.get("NT2", []))
+    out["nt2_instances_final"] = n_nt2
+    out["pr_count"] = nic.regions.pr_count
+    return out
+
+
+# ===================================== §7.1.4: distributed sNIC offload =====
+def sec714_distributed_offload(dur_ms: float = 6.0) -> dict:
+    """Distributed platform: remote launch control cost + per-packet detour
+    latency (paper: 2.3 us launch, +1.3 us per packet)."""
+    specs = _specs(["NT1", "NT2"], gbps=100.0, fixed=300.0)
+    sim = EventSim()
+    rack = make_rack(sim, 2, specs, cfg_kw=dict(
+        n_regions=1, enable_drf=False, enable_autoscale=False))
+    a, b = rack.snics
+    a.deploy([_chain_dag(1, "u1", ("NT1",))])
+    sim.run(PAPER.PR_NS + 1)
+    a.inject("u1", 1, 500)
+    sim.run(sim.now + 1 * MS)
+    t0 = sim.now
+    poisson_source(sim, rate_gbps=10.0, mean_bytes=800, tenant="u1",
+                   dag_uid=1, sink=a.inject, seed=7,
+                   until_ns=t0 + 2 * dur_ms * MS)
+    # u2's chain cannot fit locally -> offloaded to b
+    a.deploy([_chain_dag(2, "u2", ("NT2",))], prelaunch=False)
+    poisson_source(sim, rate_gbps=10.0, mean_bytes=800, tenant="u2",
+                   dag_uid=2, sink=a.inject, seed=8,
+                   until_ns=t0 + 2 * dur_ms * MS)
+    # steady state: measure only packets after the one-time remote PR has
+    # finished and the backlog burst drained (the paper's +1.3us is the
+    # per-packet detour with the chain live)
+    from repro.core.sim import FlowStats as _FS
+
+    def reset_stats():
+        a.stats["u1"] = _FS()
+        b.stats["u2"] = _FS()
+        a.stats["u2"] = b.stats["u2"]
+    sim.at(t0 + PAPER.PR_NS + 3 * MS, reset_stats)
+    sim.run(t0 + dur_ms * MS * 3)
+    local = a.stats["u1"].mean_latency_us()
+    remote = b.stats["u2"].mean_latency_us()
+    return {"local_us": round(local, 2), "remote_us": round(remote, 2),
+            "detour_added_us": round(remote - local, 2),
+            "remote_launch_ctrl_us": PAPER.REMOTE_LAUNCH_NS / 1e3,
+            "migrations": len(rack.migrations)}
+
+
+# =================================================== Fig 7: resource budget ==
+def fig7_resource_budget() -> dict:
+    """Fig 7 analogue: compiled-code footprint of the fixed 'shell'
+    (prefill/decode drivers for the serving engine) vs one NT program
+    (the VPC chain) — the consolidation-substrate equivalent of the paper's
+    <10% shell share."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.serving.vpc import make_rules, vpc_chain
+
+    cfg = configs.get_tiny_config("yi-6b")
+    from repro.models import model as MD
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+
+    def code_size(fn, *args):
+        c = jax.jit(fn).lower(*args).compile()
+        m = c.memory_analysis()
+        sz = getattr(m, "generated_code_size_in_bytes", 0) or 0
+        if not sz:                      # CPU backend: use HLO size proxy
+            sz = len(c.as_text())
+        return sz
+
+    decode_sz = code_size(
+        lambda p, c, b, t: MD.apply_decode(p, cfg, c, b, t), params,
+        MD.init_cache(cfg, 2, 32, jnp.float32),
+        {"tokens": jnp.zeros((2, 1), jnp.int32)}, jnp.int32(4))
+    rules = make_rules(8)
+    headers = jnp.zeros((256, 5), jnp.uint32)
+    payload = jnp.zeros((256, 16), jnp.uint32)
+    vpc_sz = code_size(lambda h, p: vpc_chain(
+        h, p, rules, jnp.arange(8, dtype=jnp.uint32),
+        jnp.arange(3, dtype=jnp.uint32)), headers, payload)
+    return {"decode_shell_bytes": decode_sz, "vpc_nt_bytes": vpc_sz,
+            "paper_core_lut_pct": 9.33, "paper_core_bram_pct": 17.11}

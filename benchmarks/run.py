@@ -1,0 +1,65 @@
+"""Benchmark harness: one entry per paper figure/table.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig14 fig15
+
+Prints ``benchmark,key,value`` CSV and writes JSON to experiments/bench/.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+from benchmarks import figures
+
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+BENCHES = {
+    "fig2_consolidation_disagg": figures.fig2_consolidation_disagg,
+    "fig3_consolidation_dc": figures.fig3_consolidation_dc,
+    "fig7_resource_budget": figures.fig7_resource_budget,
+    "fig8_9_ycsb": figures.fig8_9_ycsb,
+    "fig10_replication": figures.fig10_replication,
+    "fig11_vpc": figures.fig11_vpc,
+    "fig12_13_fb_consolidation": figures.fig12_13_fb_consolidation,
+    "fig14_credits": figures.fig14_credits,
+    "fig15_chaining": figures.fig15_chaining,
+    "fig16_parallelism": figures.fig16_parallelism,
+    "fig17_drf_autoscale": figures.fig17_drf_autoscale,
+    "sec714_distributed_offload": figures.sec714_distributed_offload,
+}
+
+
+def main(argv=None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    names = [a for a in args if not a.startswith("-")] or list(BENCHES)
+    OUT.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for name in names:
+        matches = [k for k in BENCHES if k.startswith(name)]
+        if not matches:
+            print(f"unknown benchmark {name!r}; known: {list(BENCHES)}")
+            return 2
+        for k in matches:
+            t0 = time.time()
+            try:
+                res = BENCHES[k]()
+            except Exception as e:  # noqa: BLE001
+                failures.append((k, repr(e)))
+                print(f"{k},ERROR,{e!r}")
+                continue
+            dt = time.time() - t0
+            res["_seconds"] = round(dt, 1)
+            for key, v in res.items():
+                print(f"{k},{key},{v}")
+            (OUT / f"{k}.json").write_text(json.dumps(res, indent=1))
+    if failures:
+        print(f"{len(failures)} benchmark(s) failed: {failures}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

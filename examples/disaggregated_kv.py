@@ -1,0 +1,26 @@
+"""Disaggregated KV-store case study (paper §6.1): YCSB over Clio-like
+memory devices, with and without sNIC transport/caching/replication NTs.
+
+  PYTHONPATH=src python examples/disaggregated_kv.py
+"""
+from repro.serving.kv_store import run_ycsb
+
+
+def main():
+    print(f"{'system':22s} {'wl':3s} {'avg us':>8s} {'p99 us':>8s} "
+          f"{'kops':>8s} {'hit%':>6s}")
+    for wl in ("A", "B", "C"):
+        for system in ("clio", "clio-snic", "clio-snic-cache"):
+            r = run_ycsb(system, workload=wl, n_ops=20000)
+            hit = (f"{100 * r.hits / max(r.hits + r.misses, 1):.1f}"
+                   if system.endswith("cache") else "-")
+            print(f"{system:22s} {wl:3s} {r.avg_us:8.2f} {r.p99_us():8.2f} "
+                  f"{r.kops(r.done_ns):8.1f} {hit:>6s}")
+    print("\nreplicated writes (K=2):")
+    for system in ("clio", "clio-snic-repl"):
+        r = run_ycsb(system, workload="A", n_ops=20000, replication=2)
+        print(f"{system:22s} A   {r.avg_us:8.2f} {r.p99_us():8.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .pipeline import Prefetcher, SyntheticLM, pack_documents, place  # noqa: F401

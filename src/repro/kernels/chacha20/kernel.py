@@ -1,0 +1,102 @@
+"""Pallas TPU ChaCha20 keystream/encryption kernel (the VPC chain's
+encryption NT).
+
+HARDWARE ADAPTATION (documented in DESIGN.md): the paper's VPC case study
+offloads AES to FPGA lookup-table S-boxes.  TPUs have no efficient byte-table
+gather, but ChaCha20 (RFC 8439) is pure add-rotate-xor on u32 lanes — it
+vectorises perfectly on the VPU with each *lane* carrying one 64-byte block's
+state word.  Same security role (stream cipher), TPU-native arithmetic.
+
+Layout: one ChaCha block is 16 u32 words.  We process ``bn`` blocks per grid
+step with state laid out (16, bn): word index on the sublane dim, block index
+on the lane dim, so all rotations/adds are full-width VPU ops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CONSTANTS = (0x61707865, 0x3320646e, 0x79622d32, 0x6b206574)
+
+
+def _rotl(x, n: int):
+    return (x << jnp.uint32(n)) | (x >> jnp.uint32(32 - n))
+
+
+def _quarter(s, a, b, c, d):
+    sa, sb, sc, sd = s[a], s[b], s[c], s[d]
+    sa = sa + sb
+    sd = _rotl(sd ^ sa, 16)
+    sc = sc + sd
+    sb = _rotl(sb ^ sc, 12)
+    sa = sa + sb
+    sd = _rotl(sd ^ sa, 8)
+    sc = sc + sd
+    sb = _rotl(sb ^ sc, 7)
+    return {**s, a: sa, b: sb, c: sc, d: sd}
+
+
+def _chacha_block_rounds(state):
+    """state: dict word-index -> (bn,) u32. 20 rounds (10 double rounds)."""
+    s = state
+    for _ in range(10):
+        # column rounds
+        s = _quarter(s, 0, 4, 8, 12)
+        s = _quarter(s, 1, 5, 9, 13)
+        s = _quarter(s, 2, 6, 10, 14)
+        s = _quarter(s, 3, 7, 11, 15)
+        # diagonal rounds
+        s = _quarter(s, 0, 5, 10, 15)
+        s = _quarter(s, 1, 6, 11, 12)
+        s = _quarter(s, 2, 7, 8, 13)
+        s = _quarter(s, 3, 4, 9, 14)
+    return s
+
+
+def _chacha_kernel(key_ref, nonce_ref, data_ref, out_ref, *, bn: int,
+                   counter0: int):
+    i = pl.program_id(0)
+    key = key_ref[...]                                   # (1, 8) u32
+    nonce = nonce_ref[...]                               # (1, 3) u32
+    ctr = (jnp.uint32(counter0) + jnp.uint32(i * bn)
+           + jax.lax.broadcasted_iota(jnp.uint32, (1, bn), 1))[0]
+    init = {}
+    for w in range(4):
+        init[w] = jnp.full((bn,), CONSTANTS[w], jnp.uint32)
+    for w in range(8):
+        init[4 + w] = jnp.broadcast_to(key[0, w], (bn,))
+    init[12] = ctr
+    for w in range(3):
+        init[13 + w] = jnp.broadcast_to(nonce[0, w], (bn,))
+    s = _chacha_block_rounds(init)
+    data = data_ref[...]                                 # (bn, 16) u32
+    for w in range(16):
+        ks = s[w] + init[w]                              # final add
+        out_ref[:, w] = data[:, w] ^ ks
+
+
+def chacha20_xor(data, key, nonce, *, counter0: int = 1,
+                 block_n: int = 512, interpret: bool = False):
+    """data: (N, 16) u32 (N 64-byte blocks); key: (8,) u32; nonce: (3,) u32.
+
+    Returns data XOR keystream — encryption and decryption are the same op.
+    """
+    N = data.shape[0]
+    bn = min(block_n, N)
+    assert N % bn == 0, (N, bn)
+    kernel = functools.partial(_chacha_kernel, bn=bn, counter0=counter0)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // bn,),
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+            pl.BlockSpec((bn, 16), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 16), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 16), jnp.uint32),
+        interpret=interpret,
+    )(key.reshape(1, 8), nonce.reshape(1, 3), data)

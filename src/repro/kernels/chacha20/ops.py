@@ -1,0 +1,30 @@
+"""Jitted wrapper: encrypt/decrypt byte payloads with ChaCha20."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import chacha20_xor
+
+
+@functools.partial(jax.jit, static_argnames=("counter0", "block_n"))
+def encrypt(data_u32, key, nonce, counter0: int = 1, block_n: int = 512):
+    """data_u32: (N, 16) u32. Encryption == decryption (stream cipher)."""
+    return chacha20_xor(data_u32, key, nonce, counter0=counter0,
+                        block_n=block_n,
+                        interpret=jax.default_backend() != "tpu")
+
+
+def bytes_to_blocks(raw: bytes):
+    """Pad bytes to 64-byte blocks -> (N, 16) u32 little-endian."""
+    import numpy as np
+    pad = (-len(raw)) % 64
+    buf = np.frombuffer(raw + b"\0" * pad, np.uint8)
+    return jnp.asarray(buf.view(np.uint32).reshape(-1, 16)), len(raw)
+
+
+def blocks_to_bytes(blocks, n_bytes: int) -> bytes:
+    import numpy as np
+    return np.asarray(blocks).view(np.uint8).tobytes()[:n_bytes]

@@ -1,0 +1,3 @@
+from .kernel import flash_attention_grouped  # noqa: F401
+from .ops import flash_attention_tpu  # noqa: F401
+from .ref import attention_ref, attention_ref_grouped  # noqa: F401

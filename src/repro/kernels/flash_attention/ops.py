@@ -1,0 +1,39 @@
+"""Jitted public wrapper around the flash-attention Pallas kernel.
+
+``flash_attention_tpu(q, k, v)`` takes the model's (B, S, H, hd) layout,
+rearranges to the kernel's grouped layout, and dispatches:
+  - on TPU: the Pallas kernel (forward; backward uses the XLA custom-vjp
+    fallback in ``repro.models.attention`` which shares the same math);
+  - elsewhere (CPU tests): the kernel in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_grouped
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_tpu(q, k, v, *, causal: bool = True, block_q: int = 256,
+                        block_k: int = 256, interpret: bool | None = None):
+    """q: (B, S, H, hd); k, v: (B, S, Kv, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    if interpret is None:
+        interpret = not _on_tpu()
+    qg = q.reshape(B, S, Kv, G, hd).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    og = flash_attention_grouped(qg, kg, vg, block_q=block_q,
+                                 block_k=block_k, causal=causal,
+                                 interpret=interpret)
+    return og.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention (naive O(S^2), f32 math)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: (B, S, H, hd); k, v: (B, S, Kv, hd) with H % Kv == 0."""
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, S, Kv, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, kf) * (hd ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, vf)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attention_ref_grouped(q, k, v, causal: bool = True):
+    """q: (B, Kv, G, S, hd); k, v: (B, Kv, S, hd) — kernel-layout oracle."""
+    B, Kv, G, S, hd = q.shape
+    s = jnp.einsum("bkgsd,bktd->bkgst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

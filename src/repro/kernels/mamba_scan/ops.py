@@ -1,0 +1,16 @@
+"""Jitted wrapper for the Mamba selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import mamba_ssm
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_di"))
+def selective_scan(x, dt, Bmat, Cmat, A, D, chunk: int = 128,
+                   block_di: int = 512):
+    return mamba_ssm(x, dt, Bmat, Cmat, A, D, chunk=chunk,
+                     block_di=block_di,
+                     interpret=jax.default_backend() != "tpu")

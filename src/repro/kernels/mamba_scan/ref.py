@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the selective scan (sequential, f32)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_ssm_ref(x, dt, Bmat, Cmat, A, D):
+    """x, dt: (B, S, di); Bmat, Cmat: (B, S, ds); A: (di, ds); D: (di,)."""
+    B, S, di = x.shape
+    ds = Bmat.shape[-1]
+
+    def body(h, inp):
+        xt, dtt, Bt, Ct = (a.astype(jnp.float32) for a in inp)
+        dA = jnp.exp(dtt[..., None] * A[None].astype(jnp.float32))
+        dBx = (dtt * xt)[..., None] * Bt[:, None, :]
+        h = dA * h + dBx
+        yt = jnp.einsum("bds,bs->bd", h, Ct) + D[None].astype(jnp.float32) * xt
+        return h, yt
+
+    xs = tuple(a.swapaxes(0, 1) for a in (x, dt, Bmat, Cmat))
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)

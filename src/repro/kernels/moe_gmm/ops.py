@@ -1,0 +1,15 @@
+"""Jitted wrapper for the grouped matmul kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import moe_gmm
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d"))
+def grouped_matmul(x, w, block_c: int = 128, block_f: int = 128,
+                   block_d: int = 512):
+    return moe_gmm(x, w, block_c=block_c, block_f=block_f, block_d=block_d,
+                   interpret=jax.default_backend() != "tpu")

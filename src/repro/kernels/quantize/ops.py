@@ -1,0 +1,24 @@
+"""Jitted wrappers; pick Pallas on TPU, interpret elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import dequantize_int8, quantize_int8
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def quantize(x, block_rows: int = 256):
+    return quantize_int8(x, block_rows=block_rows, interpret=_interp())
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "block_rows"))
+def dequantize(q, scale, dtype=jnp.float32, block_rows: int = 256):
+    return dequantize_int8(q, scale, dtype, block_rows=block_rows,
+                           interpret=_interp())

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for int8 block quantization."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_int8_ref(x):
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_ref(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,14 @@
+"""Jitted wrapper for the WKV-6 kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rwkv6_wkv
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv(r, k, v, w, u, chunk: int = 128):
+    return rwkv6_wkv(r, k, v, w, u, chunk=chunk,
+                     interpret=jax.default_backend() != "tpu")

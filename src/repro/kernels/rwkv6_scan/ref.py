@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the WKV-6 recurrence (sequential, f32)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_wkv_ref(r, k, v, w, u):
+    """r,k,v,w: (B, H, S, hd); u: (H, hd) -> y (B, H, S, hd)."""
+    B, H, S, hd = r.shape
+
+    def body(S_km, inp):
+        rt, kt, vt, wt = (a.astype(jnp.float32) for a in inp)  # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]
+        att = S_km + u[None, :, :, None].astype(jnp.float32) * kv
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        return wt[..., :, None].astype(jnp.float32) * S_km + kv, yt
+
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (r, k, v, w))
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, ys = jax.lax.scan(body, s0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype)

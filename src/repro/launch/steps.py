@@ -1,0 +1,171 @@
+"""Step functions (train / prefill / decode) + abstract input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, no device allocation — used by
+the multi-pod dry-run and the roofline harness.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import model as MD
+from repro.optim import adamw
+
+# Architectures whose optimizer moments are stored in bf16 so that
+# params+moments fit the 16 GB/chip HBM budget (documented in DESIGN.md).
+BF16_MOMENT_PARAM_THRESHOLD = 20e9
+SERVE_DTYPE = jnp.bfloat16
+
+
+def moment_dtype_for(cfg) -> str:
+    n = cfg.param_counts()["total"]
+    return "bfloat16" if n > BF16_MOMENT_PARAM_THRESHOLD else "float32"
+
+
+# ================================================================== steps ====
+def make_train_step(cfg, *, lr: float = 3e-4, weight_decay: float = 0.1,
+                    grad_accum: int | None = None):
+    """(params, opt, batch) -> (params, opt, metrics).
+
+    ``grad_accum`` > 1 scans over microbatches accumulating gradients —
+    activation memory scales with the microbatch, so the largest assigned
+    architectures fit the per-chip HBM budget (grok-1: 16, jamba/qwen-32b: 4).
+    The accumulator dtype follows the moment dtype (bf16 for >20 B params).
+    """
+    accum = grad_accum if grad_accum is not None else cfg.grad_accum
+    acc_dt = jnp.dtype(moment_dtype_for(cfg))
+    mixed = jnp.dtype(cfg.compute_dtype) == jnp.bfloat16
+
+    def cast_params(t):
+        # Mixed precision: f32 master weights live in the optimizer; the
+        # fwd/bwd graph sees a bf16 copy made while still sharded, so FSDP
+        # all-gathers move half the bytes and no f32 gather buffers exist.
+        if not mixed:
+            return t
+        return jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, t)
+
+    def train_step(params, opt, batch):
+        wp = cast_params(params)
+        if accum <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                MD.apply_train, has_aux=True)(wp, cfg, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum,
+                                    *x.shape[1:]), batch)
+
+            def micro(g, b):
+                (_, m), gi = jax.value_and_grad(
+                    MD.apply_train, has_aux=True)(wp, cfg, b)
+                g = jax.tree.map(
+                    lambda a, x: (a + x.astype(acc_dt) / accum).astype(acc_dt),
+                    g, gi)
+                return g, m
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, acc_dt), params)
+            grads, ms = jax.lax.scan(micro, g0, mb)
+            metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+        params, opt, om = adamw.update(grads, opt, params, lr=lr,
+                                       weight_decay=weight_decay)
+        metrics = {**metrics, **om}
+        return params, opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    """(params, batch) -> (next_token, cache)."""
+
+    def prefill_step(params, batch):
+        logits, cache = MD.apply_prefill(params, cfg, batch)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    """(params, cache, batch, pos) -> (next_token, cache)."""
+
+    def decode_step(params, cache, batch, pos):
+        logits, cache = MD.apply_decode(params, cfg, cache, batch, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return decode_step
+
+
+# ============================================================ input specs ====
+def abstract_params(cfg, dtype=None):
+    p = jax.eval_shape(functools.partial(MD.init_params, cfg=cfg),
+                       jax.random.PRNGKey(0))
+    if dtype is not None:
+        p = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, dtype if jnp.issubdtype(x.dtype, jnp.floating)
+                else x.dtype), p)
+    return p
+
+
+def abstract_opt(cfg, params):
+    return jax.eval_shape(
+        functools.partial(adamw.init, moment_dtype=moment_dtype_for(cfg)),
+        params)
+
+
+def abstract_batch(cfg, B: int, S: int, kind: str):
+    b: dict = {}
+    if cfg.frontend == "tokens":
+        b["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        b["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), SERVE_DTYPE
+                                           if kind != "train" else jnp.float32)
+    if kind == "train":
+        b["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return b
+
+
+def abstract_cache(cfg, B: int, max_len: int, dtype=SERVE_DTYPE):
+    return jax.eval_shape(
+        functools.partial(MD.init_cache, cfg, B, max_len, dtype))
+
+
+@dataclass
+class CellSpec:
+    """Everything needed to lower one (arch x shape) cell."""
+    cfg: Any
+    shape: Any
+    kind: str                      # train | prefill | decode
+    step: Any                      # the python step function
+    args: tuple                    # abstract arg tree
+    donate: tuple                  # donate_argnums
+
+
+def input_specs(arch: str, shape_name: str) -> CellSpec:
+    cfg = configs.get_config(arch)
+    shape = configs.SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        params = abstract_params(cfg)
+        opt = abstract_opt(cfg, params)
+        batch = abstract_batch(cfg, B, S, "train")
+        return CellSpec(cfg, shape, "train", make_train_step(cfg),
+                        (params, opt, batch), donate=(0, 1))
+    if shape.kind == "prefill":
+        params = abstract_params(cfg, SERVE_DTYPE)
+        batch = abstract_batch(cfg, B, S, "prefill")
+        return CellSpec(cfg, shape, "prefill", make_prefill_step(cfg),
+                        (params, batch), donate=())
+    # decode: one new token against a KV cache of length seq_len
+    params = abstract_params(cfg, SERVE_DTYPE)
+    cache = abstract_cache(cfg, B, S)
+    batch = abstract_batch(cfg, B, 1, "decode")
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return CellSpec(cfg, shape, "decode", make_decode_step(cfg),
+                    (params, cache, batch, pos), donate=(1,))

@@ -1,0 +1,3 @@
+"""Model definitions for the ten assigned architectures (pure JAX)."""
+from .model import (apply_decode, apply_prefill, apply_train, dummy_batch,
+                    init_cache, init_params)  # noqa: F401

@@ -1,0 +1,224 @@
+"""Grouped-query attention with a memory-bounded flash fallback.
+
+``flash_attention`` is a custom-vjp causal attention: the forward scans query
+blocks (never materialising the full S x S score matrix) and saves only
+(q, k, v, out, lse); the backward rescans query blocks and recomputes scores
+blockwise.  This is the XLA fallback with the same residual contract as the
+Pallas TPU kernel in ``repro.kernels.flash_attention``.
+
+Entry points per layer:
+  - ``attn_train``   : full-sequence causal attention (training / prefill)
+  - ``attn_prefill`` : same, but also returns the KV cache
+  - ``attn_decode``  : one new token against a (possibly longer) KV cache
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear, linear_init, rmsnorm, rmsnorm_init, apply_rope, apply_mrope
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype=jnp.float32):
+    d, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": linear_init(ks[0], d, H * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": linear_init(ks[1], d, Kv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": linear_init(ks[2], d, Kv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": linear_init(ks[3], H * hd, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x).reshape(B, S, H, hd)
+    k = linear(p["wk"], x).reshape(B, S, Kv, hd)
+    v = linear(p["wv"], x).reshape(B, S, Kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ======================================================== flash attention ====
+def _fa_forward(q, k, v, block_q: int, causal: bool):
+    """Query-block scan.  q: (B,S,H,hd); k,v: (B,S,Kv,hd).
+    Returns out (B,S,H,hd) (q.dtype) and lse (B,S,H) f32."""
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    bq = min(block_q, S)
+    nq = S // bq
+    assert S % bq == 0, (S, bq)
+    scale = hd ** -0.5
+    qb = q.reshape(B, nq, bq, Kv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kv_pos = jnp.arange(S)
+
+    def qblock(_, inp):
+        qi, i = inp                                    # (B,bq,Kv,G,hd)
+        s = jnp.einsum("bqkgd,btkd->bqkgt", qi, k,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = i * bq + jnp.arange(bq)
+            mask = q_pos[:, None] >= kv_pos[None, :]   # (bq, S)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        den = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bqkgt,btkd->bqkgd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        o = o / jnp.maximum(den[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(den, 1e-30))
+        return None, (o.astype(q.dtype), lse)
+
+    _, (ob, lse) = jax.lax.scan(qblock, None, (qb, jnp.arange(nq)))
+    out = ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
+    lse = lse.transpose(1, 0, 2, 3, 4).reshape(B, S, H)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, block_q: int = 512, causal: bool = True):
+    out, _ = _fa_forward(q, k, v, block_q, causal)
+    return out
+
+
+def _fa_fwd(q, k, v, block_q, causal):
+    out, lse = _fa_forward(q, k, v, block_q, causal)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(block_q, causal, res, do):
+    q, k, v, out, lse = res
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    bq = min(block_q, S)
+    nq = S // bq
+    scale = hd ** -0.5
+    # delta = rowsum(dout * out): (B,S,H)
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    resh = lambda x: x.reshape(B, nq, bq, Kv, G, -1).transpose(  # noqa: E731
+        1, 0, 2, 3, 4, 5)
+    qb, dob = resh(q), resh(do)
+    lseb = lse.reshape(B, nq, bq, Kv, G).transpose(1, 0, 2, 3, 4)
+    deltab = delta.reshape(B, nq, bq, Kv, G).transpose(1, 0, 2, 3, 4)
+    kv_pos = jnp.arange(S)
+
+    def qblock(carry, inp):
+        dk, dv = carry
+        qi, doi, lsei, di, i = inp
+        s = jnp.einsum("bqkgd,btkd->bqkgt", qi, k,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = i * bq + jnp.arange(bq)
+            mask = q_pos[:, None] >= kv_pos[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lsei[..., None])               # (B,bq,Kv,G,S)
+        dp = jnp.einsum("bqkgd,btkd->bqkgt", doi.astype(jnp.float32), v.astype(jnp.float32))
+        ds = p * (dp - di[..., None]) * scale
+        dq_i = jnp.einsum("bqkgt,btkd->bqkgd", ds, k.astype(jnp.float32))
+        dk = dk + jnp.einsum("bqkgt,bqkgd->btkd", ds, qi.astype(jnp.float32))
+        dv = dv + jnp.einsum("bqkgt,bqkgd->btkd", p, doi.astype(jnp.float32))
+        return (dk, dv), dq_i
+
+    dk0 = jnp.zeros(k.shape, jnp.float32)
+    dv0 = jnp.zeros(v.shape, jnp.float32)
+    (dk, dv), dqb = jax.lax.scan(qblock, (dk0, dv0),
+                                 (qb, dob, lseb, deltab, jnp.arange(nq)))
+    dq = dqb.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def causal_attention(q, k, v, block_q: int):
+    """flash_attention with sequence padding to a block multiple.  Padded
+    KV positions sit at indices >= S, which causality masks for every real
+    query; padded query rows are sliced away."""
+    S = q.shape[1]
+    bq = min(block_q, S)
+    pad = (-S) % bq
+    if pad == 0:
+        return flash_attention(q, k, v, block_q, True)
+    padq = [(0, 0)] * q.ndim
+    padq[1] = (0, pad)
+    qp = jnp.pad(q, padq)
+    kp = jnp.pad(k, padq)
+    vp = jnp.pad(v, padq)
+    return flash_attention(qp, kp, vp, block_q, True)[:, :S]
+
+
+def attn_train(p, x, cfg, positions):
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = causal_attention(q, k, v, cfg.attn_block)
+    B, S, _, _ = o.shape
+    return linear(p["wo"], o.reshape(B, S, -1))
+
+
+def attn_prefill(p, x, cfg, positions):
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = causal_attention(q, k, v, cfg.attn_block)
+    B, S, _, _ = o.shape
+    return linear(p["wo"], o.reshape(B, S, -1)), (k, v)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len):
+    """q: (B, 1, H, hd); caches: (B, S_max, Kv, hd); kv_len: valid prefix length.
+
+    Plain sharded-reduction form: scores (B, H, S_max) are small for decode and
+    the softmax reduction over a sequence-sharded cache lowers to partial
+    reductions + a tiny all-reduce under GSPMD (flash-decoding-equivalent).
+    """
+    B, Smax, Kv, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // Kv
+    scale = hd ** -0.5
+    qg = q.reshape(B, Kv, G, hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(Smax)
+    s = jnp.where(pos[None, None, None, :] < kv_len, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgt,btkd->bkgd", (p / denom).astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attn_decode(p, x, cfg, k_cache, v_cache, pos):
+    """x: (B, 1, d); caches (B, S_max, Kv, hd); pos: scalar current position.
+
+    Returns (y, new_k_cache, new_v_cache).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    if cfg.mrope_sections:  # text-only decode: all three M-RoPE indices = pos
+        positions = jnp.broadcast_to(positions, (3, B, 1))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    # scatter the new token into the cache at ``pos``
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, pos, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, pos + 1)
+    y = linear(p["wo"], o.reshape(B, 1, -1))
+    return y, k_cache, v_cache

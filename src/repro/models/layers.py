@@ -1,0 +1,175 @@
+"""Shared neural-net building blocks (pure JAX, pytree params).
+
+Conventions:
+  - activations are (batch, seq, d_model); attention internals (B, S, H, hd).
+  - params are nested dicts of jnp arrays; every module has <name>_init / <name> apply.
+  - compute dtype is controlled by the caller (configs set bf16 for production,
+    f32 for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- linear ----
+def linear_init(key, in_dim: int, out_dim: int, *, bias: bool = False,
+                scale: float | None = None, dtype=jnp.float32):
+    if scale is None:
+        scale = 1.0 / math.sqrt(in_dim)
+    p = {"w": (jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32)
+               * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype=dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ----------------------------------------------------------------- norms ----
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"g": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    # reduce in f32 for stability regardless of compute dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"g": jnp.ones((dim,), dtype=dtype), "b": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(kind: str, dim: int, dtype=jnp.float32):
+    return layernorm_init(dim, dtype) if kind == "layernorm" else rmsnorm_init(dim, dtype)
+
+
+def norm_apply(kind: str, p, x):
+    return layernorm(p, x) if kind == "layernorm" else rmsnorm(p, x)
+
+
+# ------------------------------------------------------------- embedding ----
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, dim), dtype=jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+# ------------------------------------------------------------------ RoPE ----
+def _rope_sincos(positions, rot_dim: int, theta: float):
+    """positions (...,) -> sin/cos of shape positions.shape + (rot_dim//2,)."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., rot/2)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, hd); positions: (B, S) or (S,). Rotates the full head dim."""
+    hd = x.shape[-1]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    sin, cos = _rope_sincos(positions, hd, theta)        # (B, S, hd/2)
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: tuple[int, ...]):
+    """Multimodal RoPE (Qwen2-VL). positions3: (3, B, S) [t, h, w] indices.
+
+    ``sections`` gives the per-modality share of rotary *pairs*; must sum to hd//2.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    # angles per modality: (3, B, S, half)
+    ang = positions3.astype(jnp.float32)[..., None] * inv_freq
+    # pick the modality for each frequency band: (half,) static section ids
+    import numpy as np
+    sect_id = np.repeat(np.arange(len(sections)), np.asarray(sections))
+    sel = jnp.asarray(np.eye(len(sections), dtype=np.float32)[sect_id])  # (half, 3)
+    ang = jnp.einsum("mbsh,hm->bsh", ang, sel)
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP ----
+def mlp_init(key, d: int, d_ff: int, kind: str = "swiglu", dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"gate": linear_init(k1, d, d_ff, dtype=dtype),
+                "up": linear_init(k2, d, d_ff, dtype=dtype),
+                "down": linear_init(k3, d_ff, d, dtype=dtype)}
+    # classic transformer MLP (GELU)
+    return {"up": linear_init(k1, d, d_ff, dtype=dtype),
+            "down": linear_init(k2, d_ff, d, dtype=dtype)}
+
+
+def mlp(p, x, kind: str = "swiglu"):
+    if kind == "swiglu":
+        return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+    return linear(p["down"], jax.nn.gelu(linear(p["up"], x)))
+
+
+# ------------------------------------------------- chunked cross-entropy ----
+def chunked_softmax_xent(x, head_w, labels, *, chunk: int = 512,
+                         label_smoothing: float = 0.0):
+    """Cross-entropy over a huge vocab without materialising (B, S, V).
+
+    x: (B, S, D) final hidden states; head_w: (D, V); labels: (B, S) int32.
+    Scans over sequence chunks so peak memory is (B, chunk, V).
+    Returns mean loss over all tokens (labels == -100 are masked out).
+    """
+    B, S, D = x.shape
+    V = head_w.shape[1]
+    nchunk = max(1, S // chunk)
+    assert S % nchunk == 0, (S, chunk)
+    csz = S // nchunk
+    xc = x.reshape(B, nchunk, csz, D).swapaxes(0, 1)          # (n, B, c, D)
+    lc = labels.reshape(B, nchunk, csz).swapaxes(0, 1)        # (n, B, c)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xx, ll = inp
+        logits = (xx @ head_w.astype(xx.dtype)).astype(jnp.float32)  # (B, c, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.clip(ll, 0, V - 1)[..., None], axis=-1)[..., 0]
+        if label_smoothing:
+            mean_logit = jnp.mean(logits, axis=-1)
+            gold = (1 - label_smoothing) * gold + label_smoothing * mean_logit
+        mask = (ll >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((logz - gold) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(body),
+                                 (jnp.float32(0.0), jnp.float32(0.0)), (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

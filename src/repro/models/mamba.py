@@ -1,0 +1,123 @@
+"""Mamba (S6 selective-state-space) block, as used by Jamba's Mamba layers.
+
+Reference semantics (Mamba-1):
+    x, z   = in_proj(u)                       # (B, S, d_inner) each
+    x      = silu(causal_depthwise_conv(x))
+    dt,B,C = x_proj(x)                        # dt: (dt_rank,), B/C: (d_state,)
+    dt     = softplus(dt_proj(dt) + dt_bias)
+    h_t    = exp(dt*A) * h_{t-1} + (dt*B_t) * x_t
+    y_t    = <h_t, C_t> + D * x_t
+    out    = out_proj(y * silu(z))
+
+The per-timestep discretisation tensors (B,S,d_inner,d_state) are never
+materialised: they are formed inside the scan body one step at a time.  The
+chunked TPU kernel lives in ``repro.kernels.mamba_scan``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear, linear_init
+
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds, dc = cfg.mamba_d_state, cfg.mamba_d_conv
+    dtr = cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_init = jnp.exp(jax.random.uniform(ks[0], (di,), jnp.float32)
+                      * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    inv_softplus = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": linear_init(ks[1], d, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (dc, di), jnp.float32)
+                   * (1.0 / math.sqrt(dc))).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": linear_init(ks[3], di, dtr + 2 * ds, dtype=dtype),
+        "dt_proj": linear_init(ks[4], dtr, di, dtype=dtype),
+        "dt_bias": inv_softplus.astype(jnp.float32),
+        "A_log": jnp.log(A),                         # keep f32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": linear_init(ks[5], di, d, dtype=dtype),
+    }
+
+
+def _causal_conv(p, x, conv_state=None):
+    """Depthwise causal conv over seq. x: (B, S, di). conv_state: (B, dc-1, di)
+    carry-in from the previous segment (decode). Returns (y, new_state)."""
+    dc = p["conv_w"].shape[0]
+    B, S, di = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, dc - 1, di), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)             # (B, S+dc-1, di)
+    y = jnp.zeros_like(x)
+    for i in range(dc):  # dc is tiny (4): unrolled shift-sum
+        y = y + xp[:, i:i + S, :] * p["conv_w"][i].astype(x.dtype)
+    y = y + p["conv_b"].astype(x.dtype)
+    return y, xp[:, -(dc - 1):, :]
+
+
+def ssm_scan(x, dt, Bmat, Cmat, A, D, h0, chunk: int = 64):
+    """Selective scan. x, dt: (B,S,di); Bmat, Cmat: (B,S,ds); A: (di,ds);
+    D: (di,); h0: (B,di,ds). Returns (y (B,S,di), h_final).
+
+    Chunked + per-segment checkpointing: backward recomputes one segment at
+    a time instead of saving a (B,di,ds) state per timestep.  The chunked
+    TPU kernel lives in ``repro.kernels.mamba_scan``.
+    """
+    B, S, di = x.shape
+    ds = Bmat.shape[-1]
+
+    def body(h, inp):
+        xt, dtt, Bt, Ct = inp                                 # (B,di),(B,di),(B,ds)
+        dA = jnp.exp(dtt[..., None] * A[None])                # (B, di, ds)
+        dBx = (dtt * xt)[..., None] * Bt[:, None, :]          # (B, di, ds)
+        h = dA * h + dBx
+        yt = jnp.einsum("bds,bs->bd", h, Ct) + D[None] * xt
+        return h, yt
+
+    c = min(chunk, S)
+    if S % c:
+        c = S
+    nc = S // c
+
+    def seg(h, inp):
+        return jax.lax.scan(body, h, inp)
+
+    xs = tuple(a.swapaxes(0, 1).reshape(nc, c, B, a.shape[-1])
+               for a in (x, dt, Bmat, Cmat))
+    h, ys = jax.lax.scan(jax.checkpoint(seg), h0, xs)
+    ys = ys.reshape(S, B, di)
+    return ys.swapaxes(0, 1), h
+
+
+def mamba_apply(p, u, cfg, conv_state=None, ssm_state=None):
+    """u: (B, S, d). Returns (out, (conv_state, ssm_state))."""
+    B, S, d = u.shape
+    di = cfg.mamba_expand * d
+    ds, dtr = cfg.mamba_d_state, cfg.dt_rank
+    xz = linear(p["in_proj"], u)
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, conv_state = _causal_conv(p, x, conv_state)
+    x = jax.nn.silu(x)
+
+    dbl = linear(p["x_proj"], x)                              # (B,S,dtr+2ds)
+    dt_raw = dbl[..., :dtr]
+    Bmat = dbl[..., dtr:dtr + ds].astype(jnp.float32)
+    Cmat = dbl[..., dtr + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        linear(p["dt_proj"], dt_raw).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                  # (di, ds)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, di, ds), jnp.float32)
+    y, ssm_state = ssm_scan(x.astype(jnp.float32), dt, Bmat, Cmat, A,
+                            p["D"], ssm_state, cfg.mamba_chunk)
+    out = linear(p["out_proj"], (y.astype(u.dtype) * jax.nn.silu(z)))
+    return out, (conv_state, ssm_state)

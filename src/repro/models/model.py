@@ -1,0 +1,341 @@
+"""Model assembly: one init/apply surface for all ten assigned architectures.
+
+Entry points (all pure functions over pytree params):
+  - ``init_params(key, cfg)``                      parameters for the full model
+  - ``apply_train(params, cfg, batch)``            -> (loss, metrics)
+  - ``apply_prefill(params, cfg, batch)``          -> (logits_last, cache)
+  - ``apply_decode(params, cfg, cache, batch, pos)``-> (logits, new_cache)
+  - ``init_cache(cfg, batch, max_len)``            decode-state pytree
+
+Layer structure is uniform across families: pre-norm mixer (attention, Mamba,
+or RWKV time-mix) with residual, then pre-norm channel (MLP, MoE, or RWKV
+channel-mix) with residual.  Homogeneous stacks (`cfg.scan_layers`) run under
+``lax.scan`` over stacked parameters so the HLO stays O(1) in depth;
+heterogeneous stacks (Jamba) unroll.
+
+Sharding is *not* applied here — ``repro.parallel`` annotates the pytrees and
+constrains activations; this module stays mesh-agnostic so smoke tests run on
+one CPU device unchanged.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import mamba as M
+from . import moe as X
+from . import rwkv6 as R
+from repro.parallel import ctx as pctx
+from .layers import (chunked_softmax_xent, embed, embed_init, linear,
+                     linear_init, mlp, mlp_init, norm_apply, norm_init)
+
+Params = Any
+
+
+# ================================================================= layers ====
+def layer_init(key, cfg, i: int, dtype):
+    mix, ch = cfg.mixer_kind(i), cfg.channel_kind(i)
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": norm_init(cfg.norm, cfg.d_model, dtype),
+         "norm2": norm_init(cfg.norm, cfg.d_model, dtype)}
+    if mix == "attn":
+        p["attn"] = A.attn_init(k1, cfg, dtype)
+    elif mix == "mamba":
+        p["mamba"] = M.mamba_init(k1, cfg, dtype)
+    elif mix == "rwkv":
+        p["rwkv_tm"] = R.timemix_init(k1, cfg, dtype)
+    if ch == "mlp":
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+    elif ch == "moe":
+        p["moe"] = X.moe_init(k2, cfg, dtype)
+    elif ch == "rwkv_cm":
+        p["rwkv_cm"] = R.channelmix_init(k2, cfg, dtype)
+    return p
+
+
+def layer_apply(p, x, cfg, i: int, positions):
+    """Full-sequence (train / prefill math). Returns (x, aux_loss)."""
+    mix, ch = cfg.mixer_kind(i), cfg.channel_kind(i)
+    aux = jnp.float32(0.0)
+    h = norm_apply(cfg.norm, p["norm1"], x)
+    if mix == "attn":
+        h = A.attn_train(p["attn"], h, cfg, positions)
+    elif mix == "mamba":
+        h, _ = M.mamba_apply(p["mamba"], h, cfg)
+    elif mix == "rwkv":
+        h, _ = R.timemix_apply(p["rwkv_tm"], h, cfg)
+    x = x + h
+    h = norm_apply(cfg.norm, p["norm2"], x)
+    if ch == "mlp":
+        h = mlp(p["mlp"], h, cfg.mlp_kind)
+    elif ch == "moe":
+        h, aux = X.moe_apply(p["moe"], h, cfg)
+    elif ch == "rwkv_cm":
+        h, _ = R.channelmix_apply(p["rwkv_cm"], h, cfg)
+    return x + h, aux
+
+
+# ------------------------------------------------------------ decode state --
+def layer_cache_init(cfg, i: int, B: int, max_len: int, dtype):
+    mix = cfg.mixer_kind(i)
+    if mix == "attn":
+        kv, hd = cfg.n_kv_heads, cfg.hd
+        return {"k": jnp.zeros((B, max_len, kv, hd), dtype),
+                "v": jnp.zeros((B, max_len, kv, hd), dtype)}
+    if mix == "mamba":
+        di = cfg.mamba_expand * cfg.d_model
+        return {"conv": jnp.zeros((B, cfg.mamba_d_conv - 1, di), dtype),
+                "ssm": jnp.zeros((B, di, cfg.mamba_d_state), jnp.float32)}
+    if mix == "rwkv":
+        H, hd = cfg.rwkv_heads, cfg.rwkv_head_size
+        return {"x_tm": jnp.zeros((B, cfg.d_model), dtype),
+                "x_cm": jnp.zeros((B, cfg.d_model), dtype),
+                "wkv": jnp.zeros((B, H, hd, hd), jnp.float32)}
+    raise ValueError(mix)
+
+
+def layer_decode(p, cache, x, cfg, i: int, pos):
+    """Single-token step. x: (B, 1, d); pos: scalar int32. -> (x, cache)."""
+    mix, ch = cfg.mixer_kind(i), cfg.channel_kind(i)
+    h = norm_apply(cfg.norm, p["norm1"], x)
+    if mix == "attn":
+        h, kc, vc = A.attn_decode(p["attn"], h, cfg, cache["k"], cache["v"], pos)
+        cache = {**cache, "k": kc, "v": vc}
+    elif mix == "mamba":
+        h, (conv, ssm) = M.mamba_apply(p["mamba"], h, cfg,
+                                       cache["conv"], cache["ssm"])
+        cache = {**cache, "conv": conv, "ssm": ssm}
+    elif mix == "rwkv":
+        h, (x_last, wkv) = R.timemix_apply(p["rwkv_tm"], h, cfg,
+                                           cache["x_tm"], cache["wkv"])
+        cache = {**cache, "x_tm": x_last, "wkv": wkv}
+    x = x + h
+    h = norm_apply(cfg.norm, p["norm2"], x)
+    if ch == "mlp":
+        h = mlp(p["mlp"], h, cfg.mlp_kind)
+    elif ch == "moe":
+        h, _ = X.moe_apply(p["moe"], h, cfg)
+    elif ch == "rwkv_cm":
+        h, x_last = R.channelmix_apply(p["rwkv_cm"], h, cfg, cache["x_cm"])
+        cache = {**cache, "x_cm": x_last}
+    return x + h, cache
+
+
+# ================================================================== model ====
+def init_params(key, cfg) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_layers, k_head, k_norm = jax.random.split(key, 4)
+    p: dict = {}
+    if cfg.frontend == "tokens":
+        p["embed"] = embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype)
+    else:  # embeds frontend stub: inputs arrive as (B, S, d_model)
+        p["in_norm"] = norm_init(cfg.norm, cfg.d_model, dtype)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    if cfg.scan_layers and cfg.is_homogeneous():
+        p["layers"] = jax.vmap(lambda k: layer_init(k, cfg, 0, dtype))(keys)
+    else:
+        p["layers"] = [layer_init(keys[i], cfg, i, dtype)
+                       for i in range(cfg.n_layers)]
+    p["final_norm"] = norm_init(cfg.norm, cfg.d_model, dtype)
+    p["head"] = linear_init(k_head, cfg.d_model, cfg.vocab_size, dtype=dtype)
+    return p
+
+
+def _uses_scan(params) -> bool:
+    return not isinstance(params["layers"], (list, tuple))
+
+
+def _positions(cfg, batch, B, S):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, axis=0)
+    if cfg.mrope_sections:  # text default: t = h = w = linear index
+        pos = jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+
+
+def embed_inputs(params, cfg, batch):
+    """Token ids or precomputed frontend embeddings -> (B, S, d) activations."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.frontend == "tokens":
+        x = embed(params["embed"], batch["tokens"]).astype(cdt)
+    else:
+        x = norm_apply(cfg.norm, params["in_norm"],
+                       batch["embeds"].astype(cdt))
+    return x
+
+
+def forward_hidden(params, cfg, batch):
+    """Runs the full stack; returns (hidden (B,S,d), aux_loss)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = _positions(cfg, batch, B, S)
+    x = pctx.constrain_acts(x, cfg.act_shard)
+
+    if _uses_scan(params):
+        def one(xx, lp):
+            xx, a = layer_apply(lp, xx, cfg, 0, positions)
+            return pctx.constrain_acts(xx, cfg.act_shard), a
+        body = _remat(one, cfg)
+
+        def step(carry, lp):
+            xx, aux = carry
+            xx, a = body(xx, lp)
+            return (xx, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0.0)),
+                                   params["layers"])
+    else:
+        aux = jnp.float32(0.0)
+        for i, lp in enumerate(params["layers"]):
+            def one_u(xx, lp, i=i):
+                xx, a = layer_apply(lp, xx, cfg, i, positions)
+                return pctx.constrain_acts(xx, cfg.act_shard), a
+            x, a = _remat(one_u, cfg)(x, lp)
+            aux = aux + a
+    return x, aux
+
+
+def apply_train(params, cfg, batch):
+    """batch: tokens|embeds, labels (B,S) int32 (-100 = masked). -> loss, metrics."""
+    x, aux = forward_hidden(params, cfg, batch)
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    xent = chunked_softmax_xent(x, params["head"]["w"], batch["labels"],
+                                chunk=cfg.loss_chunk)
+    loss = xent + aux
+    return loss, {"xent": xent, "aux": aux, "loss": loss}
+
+
+# ================================================================ serving ====
+def init_cache(cfg, B: int, max_len: int, dtype=jnp.bfloat16):
+    per_layer = [layer_cache_init(cfg, i, B, max_len, dtype)
+                 for i in range(cfg.n_layers)]
+    if cfg.scan_layers and cfg.is_homogeneous():
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    return per_layer
+
+
+def apply_prefill(params, cfg, batch, max_len: int | None = None):
+    """Processes the prompt; returns (logits_last (B,V), cache at len S).
+
+    The returned attention caches have length ``max_len`` (default S) so
+    decode can append in place.
+    """
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    max_len = max_len or S
+    positions = _positions(cfg, batch, B, S)
+    cdt = x.dtype
+
+    def prefill_layer(lp, xx, i):
+        mix, ch = cfg.mixer_kind(i), cfg.channel_kind(i)
+        cache = layer_cache_init(cfg, i, B, max_len, cdt)
+        h = norm_apply(cfg.norm, lp["norm1"], xx)
+        if mix == "attn":
+            h, (k, v) = A.attn_prefill(lp["attn"], h, cfg, positions)
+            cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cdt), (0, 0, 0, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cdt), (0, 0, 0, 0))
+        elif mix == "mamba":
+            h, (conv, ssm) = M.mamba_apply(lp["mamba"], h, cfg)
+            cache.update(conv=conv.astype(cdt), ssm=ssm)
+        elif mix == "rwkv":
+            h, (x_last, wkv) = R.timemix_apply(lp["rwkv_tm"], h, cfg)
+            cache.update(x_tm=x_last, wkv=wkv)
+        xx = xx + h
+        h = norm_apply(cfg.norm, lp["norm2"], xx)
+        if ch == "mlp":
+            h = mlp(lp["mlp"], h, cfg.mlp_kind)
+        elif ch == "moe":
+            h, _ = X.moe_apply(lp["moe"], h, cfg)
+        elif ch == "rwkv_cm":
+            h, x_last = R.channelmix_apply(lp["rwkv_cm"], h, cfg)
+            cache["x_cm"] = x_last
+        return xx + h, cache
+
+    x = pctx.constrain_acts(x, cfg.act_shard)
+    if _uses_scan(params):
+        def step(xx, lp):
+            xx, cache = prefill_layer(lp, xx, 0)
+            return pctx.constrain_acts(xx, cfg.act_shard), cache
+        x, cache = jax.lax.scan(step, x, params["layers"])
+    else:
+        caches = []
+        for i, lp in enumerate(params["layers"]):
+            x, c = prefill_layer(lp, x, i)
+            x = pctx.constrain_acts(x, cfg.act_shard)
+            caches.append(c)
+        cache = caches
+    x = norm_apply(cfg.norm, params["final_norm"], x[:, -1:, :])
+    logits = linear(params["head"], x)[:, 0, :]
+    return logits, cache
+
+
+def apply_decode(params, cfg, cache, batch, pos):
+    """One decode step. batch: tokens (B,1) | embeds (B,1,d); pos scalar int32.
+
+    Returns (logits (B,V), new_cache)."""
+    x = embed_inputs(params, cfg, batch)
+
+    if _uses_scan(params):
+        # The cache rides in the CARRY with per-layer dynamic-update-slice,
+        # not as scan xs->ys: stacked ys cannot alias the input, so XLA
+        # would copy the entire multi-GB KV cache every step (measured 3-4
+        # full-cache copies per decode on the 32k cells).  The carry form
+        # updates in place and lets donation alias input/output buffers.
+        L = jax.tree.leaves(params["layers"])[0].shape[0]
+
+        def step(carry, inp):
+            xx, full = carry
+            lp, i = inp
+            lc = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                       keepdims=False), full)
+            xx, lc = layer_decode(lp, lc, xx, cfg, 0, pos)
+            full = jax.tree.map(
+                lambda a, b: jax.lax.dynamic_update_index_in_dim(a, b, i, 0),
+                full, lc)
+            return (xx, full), None
+
+        (x, cache), _ = jax.lax.scan(
+            step, (x, cache), (params["layers"], jnp.arange(L)))
+    else:
+        new = []
+        for i, (lp, lc) in enumerate(zip(params["layers"], cache)):
+            x, lc = layer_decode(lp, lc, x, cfg, i, pos)
+            new.append(lc)
+        cache = new
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    logits = linear(params["head"], x)[:, 0, :]
+    return logits, cache
+
+
+# ============================================================ input specs ====
+def dummy_batch(cfg, B: int, S: int, kind: str = "train", key=None):
+    """Concrete small batch for smoke tests (CPU)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    b: dict = {}
+    if cfg.frontend == "tokens":
+        b["tokens"] = jax.random.randint(k1, (B, S), 0, cfg.vocab_size,
+                                         dtype=jnp.int32)
+    else:
+        b["embeds"] = jax.random.normal(k1, (B, S, cfg.d_model),
+                                        jnp.float32) * 0.02
+    if kind == "train":
+        b["labels"] = jax.random.randint(k2, (B, S), 0, cfg.vocab_size,
+                                         dtype=jnp.int32)
+    return b

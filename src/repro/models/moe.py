@@ -1,0 +1,155 @@
+"""Mixture-of-Experts layer: top-k routing with *grouped*, capacity-bounded
+sort dispatch (GShard-style).
+
+Tokens are grouped by batch row: dispatch (argsort / rank / scatter) happens
+independently inside each group along its own token axis, so under pjit the
+group dim stays sharded over the data axes and **no cross-device sort or
+scatter is ever generated** — expert compute is one big
+(G, E, C, d) x (E, d, f) einsum that GSPMD tensor-parallelises over d_ff.
+A flat global-sort formulation would force GSPMD to all-gather the token
+dim; that variant is kept only as ``moe_dense_mode`` for tiny smoke tests.
+
+``repro.kernels.moe_gmm`` provides the TPU grouped-matmul kernel for the
+expert FFNs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import ctx as pctx
+from .layers import linear_init
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d, dff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+
+    def stack(k, a, b, s):
+        return (jax.random.normal(k, (E, a, b), dtype=jnp.float32) * s).astype(dtype)
+
+    return {
+        "router": linear_init(ks[0], d, E, dtype=jnp.float32),  # router in f32
+        "gate": stack(ks[1], d, dff, scale),
+        "up": stack(ks[2], d, dff, scale),
+        "down": stack(ks[3], dff, d, 1.0 / math.sqrt(dff)),
+    }
+
+
+def router_topk(p, x, cfg):
+    """x: (..., d) -> gates (..., k), idx (..., k), aux_loss (scalar)."""
+    logits = (x.astype(jnp.float32) @ p["router"]["w"])          # (..., E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.moe_top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # switch-style load-balance loss + router z-loss
+    E = cfg.n_experts
+    flat = probs.reshape(-1, E)
+    me = jnp.mean(flat, axis=0)                                  # mean prob / expert
+    ce = jnp.mean(jax.nn.one_hot(idx.reshape(-1, cfg.moe_top_k)[:, 0], E,
+                                 dtype=jnp.float32), axis=0)
+    lb = E * jnp.sum(me * ce)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = cfg.moe_aux_coeff * lb + cfg.moe_z_coeff * z
+    return gates, idx, aux
+
+
+def capacity(tokens_per_group: int, cfg) -> int:
+    c = int(math.ceil(tokens_per_group * cfg.moe_top_k
+                      * cfg.moe_capacity_factor / cfg.n_experts))
+    c = max(cfg.moe_top_k, c)
+    return -(-c // 8) * 8 if c >= 8 else c       # multiple of 8 when large
+
+
+def _group_dispatch(xg, gates, idx, E: int, C: int):
+    """Per-group dispatch.  xg: (T, d); gates/idx: (T, k).
+
+    Returns (x_exp (E, C, d), slot (T*k,), keep (T*k,), t_flat (T*k,),
+    g_flat (T*k,)) — everything needed to combine later."""
+    T, d = xg.shape
+    k = idx.shape[-1]
+    TK = T * k
+    e_flat = idx.reshape(TK)
+    g_flat = gates.reshape(TK).astype(xg.dtype)
+    t_flat = jnp.repeat(jnp.arange(T), k)
+
+    order = jnp.argsort(e_flat)                                   # stable
+    e_s, t_s = e_flat[order], t_flat[order]
+    counts = jnp.bincount(e_flat, length=E)
+    starts = jnp.cumsum(counts) - counts                          # exclusive
+    rank = jnp.arange(TK) - starts[e_s]
+    keep = rank < C
+    slot = jnp.where(keep, e_s * C + rank, E * C)                 # E*C = drop
+
+    x_exp = jnp.zeros((E * C + 1, d), xg.dtype).at[slot].set(xg[t_s])
+    return x_exp[:-1].reshape(E, C, d), slot, keep, t_s, g_flat[order]
+
+
+def _group_combine(y_exp, slot, keep, t_s, g_s, T: int, d: int, E: int, C: int):
+    """y_exp: (E*C, d) -> y (T, d) weighted by router gates."""
+    contrib = y_exp[jnp.clip(slot, 0, E * C - 1)] * (g_s * keep)[:, None]
+    return jnp.zeros((T, d), y_exp.dtype).at[t_s].add(contrib)
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, S, d) -> (y, aux_loss). Grouped capacity dispatch (group = batch
+    row), so dispatch never crosses the data-sharded batch axis."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+
+    gates, idx, aux = router_topk(p, x, cfg)          # (B, S, k)
+
+    if cfg.moe_dense_mode:
+        # tiny-config fallback: run every expert on every token (smoke tests)
+        xf = x.reshape(B * S, d)
+        h = jnp.einsum("td,edf->tef", xf, p["gate"].astype(xf.dtype))
+        u = jnp.einsum("td,edf->tef", xf, p["up"].astype(xf.dtype))
+        y_all = jnp.einsum("tef,efd->ted", jax.nn.silu(h) * u,
+                           p["down"].astype(xf.dtype))            # (T, E, d)
+        full_w = jnp.zeros((B * S, E), xf.dtype)
+        full_w = full_w.at[jnp.arange(B * S)[:, None],
+                           idx.reshape(B * S, k)].add(
+            gates.reshape(B * S, k).astype(xf.dtype))
+        y = jnp.einsum("ted,te->td", y_all, full_w)
+        return y.reshape(B, S, d), aux
+
+    C = capacity(S, cfg)
+    x_exp, slot, keep, t_s, g_s = jax.vmap(
+        lambda xg, gg, ii: _group_dispatch(xg, gg, ii, E, C))(x, gates, idx)
+    # x_exp: (G=B, E, C, d) — one batched expert FFN for all groups.
+    # GSPMD's scatter/gather propagation is conservative: without explicit
+    # constraints it replicates the group dim, blowing activation memory by
+    # the data-parallel degree.  Pin groups to the data axes and the expert
+    # FFN's hidden dim to the model axis.
+    if cfg.moe_ep:
+        # expert parallelism: the expert dim lives on the model axis; the
+        # dispatch/combine re-shard (dp,...) <-> (dp, E/model, ...) lowers
+        # to all-to-alls over routed tokens instead of full-d_model gathers
+        x_exp = pctx.constrain(x_exp, "dp", "model", None, None)
+        h = jnp.einsum("gecd,edf->gecf", x_exp, p["gate"].astype(x.dtype))
+        u = jnp.einsum("gecd,edf->gecf", x_exp, p["up"].astype(x.dtype))
+        h = pctx.constrain(h, "dp", "model", None, None)
+        u = pctx.constrain(u, "dp", "model", None, None)
+        y_exp = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u,
+                           p["down"].astype(x.dtype))
+        y_exp = pctx.constrain(y_exp, "dp", "model", None, None)
+    else:
+        # with fsdp_only the batch axes cover the whole mesh; there is no
+        # TP axis left for the expert hidden dim
+        tp_ax = None if pctx.dp_all() else "model"
+        x_exp = pctx.constrain(x_exp, "dp", None, None, None)
+        h = jnp.einsum("gecd,edf->gecf", x_exp, p["gate"].astype(x.dtype))
+        u = jnp.einsum("gecd,edf->gecf", x_exp, p["up"].astype(x.dtype))
+        h = pctx.constrain(h, "dp", None, None, tp_ax)
+        u = pctx.constrain(u, "dp", None, None, tp_ax)
+        y_exp = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u,
+                           p["down"].astype(x.dtype))
+        y_exp = pctx.constrain(y_exp, "dp", None, None, None)
+    y = jax.vmap(
+        lambda ye, sl, kp, ts, gs: _group_combine(
+            ye.reshape(E * C, d), sl, kp, ts, gs, S, d, E, C))(
+        y_exp, slot, keep, t_s, g_s)
+    return y.reshape(B, S, d), aux

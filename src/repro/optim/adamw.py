@@ -1,0 +1,118 @@
+"""AdamW with global-norm clipping and configurable moment dtype.
+
+Moments may be stored in bf16 (``moment_dtype="bfloat16"``) for the
+largest assigned architectures (grok-1-314b, jamba-52b, qwen2.5-32b) so the
+optimizer state fits the per-chip HBM budget — a standard distributed-
+training memory trick; accuracy impact is negligible at these scales because
+the update math still runs in f32.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def init(params: Any, moment_dtype: str = "float32") -> AdamWState:
+    dt = jnp.dtype(moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return AdamWState(m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads: Any, state: AdamWState, params: Any, *,
+           lr: float | jax.Array, b1: float = 0.9, b2: float = 0.95,
+           eps: float = 1e-8, weight_decay: float = 0.1,
+           clip_norm: float = 1.0,
+           layer_scan: bool | None = None) -> tuple[Any, AdamWState, dict]:
+    """``layer_scan``: apply the update to the stacked ``params["layers"]``
+    subtree under ``lax.scan`` over the layer dim, so the f32 update
+    temporaries are one layer wide instead of L layers wide (O(GB) savings
+    for the 64-layer 314 B-param config).  Auto-enabled for stacked trees."""
+    count = state.count + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        step = (m32 / c1) / (jnp.sqrt(v32 / c2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return (newp.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    def split(out):
+        f = lambda i: jax.tree.map(lambda t: t[i], out,  # noqa: E731
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        return f(0), f(1), f(2)
+
+    if layer_scan is None:
+        layer_scan = (isinstance(params, dict) and "layers" in params
+                      and not isinstance(params["layers"], (list, tuple)))
+    if layer_scan:
+        lp, lg = params["layers"], grads["layers"]
+        lm, lv = state.m["layers"], state.v["layers"]
+        L = jax.tree.leaves(lp)[0].shape[0]
+
+        # carry the full stacked buffers and update one layer slice per
+        # iteration with dynamic-update-slice: the while-loop carry aliases
+        # the donated inputs (in-place sweep), and the f32 update
+        # temporaries are one layer wide instead of L layers wide.
+        def body(carry, x):
+            p, m, v = carry
+            g, i = x
+            sl = lambda t: jax.tree.map(  # noqa: E731
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                       keepdims=False), t)
+            out = jax.tree.map(upd, sl(p), g, sl(m), sl(v))
+            op, om, ov = split(out)
+            put = lambda t, o: jax.tree.map(  # noqa: E731
+                lambda a, b: jax.lax.dynamic_update_index_in_dim(a, b, i, 0),
+                t, o)
+            return (put(p, op), put(m, om), put(v, ov)), None
+
+        (nlp, nlm, nlv), _ = jax.lax.scan(
+            body, (lp, lm, lv), (lg, jnp.arange(L)))
+        rest = {k: v for k, v in params.items() if k != "layers"}
+        rout = jax.tree.map(upd, rest,
+                            {k: grads[k] for k in rest},
+                            {k: state.m[k] for k in rest},
+                            {k: state.v[k] for k in rest})
+        rp, rm, rv = split(rout)
+        newp = {**rp, "layers": nlp}
+        newm = {**rm, "layers": nlm}
+        newv = {**rv, "layers": nlv}
+    else:
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        newp, newm, newv = split(out)
+    return newp, AdamWState(newm, newv, count), {"grad_norm": gnorm}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return lr

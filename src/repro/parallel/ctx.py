@@ -1,0 +1,76 @@
+"""Activation-sharding context: lets mesh-agnostic model code emit
+``with_sharding_constraint`` hints only when a distribution policy is active.
+
+The dry-run / trainer calls ``set_policy(mesh)`` before tracing; smoke tests
+on one CPU device never set it, so constraints are no-ops there.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_POLICY: dict | None = None
+
+
+def set_policy(mesh: Mesh | None, dp_all_axes: bool = False) -> None:
+    global _POLICY
+    if mesh is None:
+        _POLICY = None
+        return
+    if dp_all_axes:                      # fsdp_only: batch over every axis
+        dp = tuple(mesh.axis_names)
+    else:
+        d_ax = tuple(a for a in mesh.axis_names if a != "model")
+        dp = d_ax if len(d_ax) > 1 else d_ax[0]
+    _POLICY = {"mesh": mesh, "dp": dp, "dp_all": dp_all_axes}
+
+
+@contextmanager
+def policy(mesh: Mesh | None, dp_all_axes: bool = False):
+    global _POLICY
+    old = _POLICY
+    set_policy(mesh, dp_all_axes)
+    try:
+        yield
+    finally:
+        _POLICY = old
+
+
+def active() -> bool:
+    return _POLICY is not None
+
+
+def dp_all() -> bool:
+    """True when the batch axes cover the whole mesh (fsdp_only)."""
+    return bool(_POLICY and _POLICY.get("dp_all"))
+
+
+def constrain(x, *spec):
+    """Apply P(*spec) where 'dp' is replaced by the data axes tuple."""
+    if _POLICY is None:
+        return x
+    spec = tuple(_POLICY["dp"] if s == "dp" else s for s in spec)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_POLICY["mesh"], P(*spec)))
+
+
+def constrain_acts(x, mode: str):
+    """Layer-boundary activation sharding: (B, S, d).
+
+    mode="seq"    -> P(dp, "model", None)   sequence parallelism
+    mode="dmodel" -> P(dp, None, "model")   feature sharding (SSM stacks)
+    mode="batch"  -> P(dp, None, None)
+    """
+    if _POLICY is None:
+        return x
+    if x.ndim != 3 or x.shape[1] == 1:          # decode: batch-only
+        mode = "batch"
+    if _POLICY.get("dp_all"):   # fsdp_only: "model" is a data axis already
+        mode = "batch"
+    if mode == "seq":
+        return constrain(x, "dp", "model", None)
+    if mode == "dmodel":
+        return constrain(x, "dp", None, "model")
+    return constrain(x, "dp", *([None] * (x.ndim - 1)))

@@ -1,0 +1,271 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Mesh axes (see ``repro.launch.mesh``):
+  - single pod : ("data", "model") = (16, 16)
+  - multi-pod  : ("pod", "data", "model") = (2, 16, 16)
+
+Baseline policy (paper-faithful "consolidation substrate" defaults):
+  - parameters: tensor-parallel over "model" on the contraction-friendly dim
+    (heads / d_ff / d_inner / vocab), FSDP over the data axes on the other
+    matrix dim; vectors and norms replicated;
+  - optimizer moments: same spec as their parameter;
+  - batch: sharded over all data axes;
+  - KV / SSM caches (decode): batch over data axes when divisible, sequence
+    over "model" (flash-decoding-style partial softmax), state dims over
+    "model" for SSM/RWKV.
+
+Uneven divisions (e.g. granite's vocab 49155 over 16) are legal: GSPMD pads.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TP = "model"
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != TP)
+
+
+def fit_spec(spec, shape, mesh: Mesh) -> P:
+    """Drop axis assignments that do not divide the dim evenly.  jax
+    requires *input* shardings to divide exactly (internal
+    with_sharding_constraint may pad, inputs may not)."""
+    out = []
+    spec = tuple(spec) + (None,) * (len(shape) - len(spec))
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(ax if dim % n == 0 else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    out = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            out.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            out.append(str(e.idx))
+        else:
+            out.append(str(e))
+    return "/".join(out)
+
+
+# rule table: (substring predicate on path, spec builder(ndim, fsdp) -> P)
+def _param_spec(path: str, ndim: int, fsdp, moe_ep: bool = False) -> P:
+    """Spec for one parameter; ``ndim`` excludes any leading stacked-layer
+    dim (the caller prepends None for it)."""
+    f = fsdp  # tuple of data axes or None
+
+    def pick(*spec):
+        return P(*spec)
+
+    # ---- embeddings / head ----
+    if path.endswith("embed/table"):
+        return pick(TP, None)               # vocab-sharded rows
+    if path.endswith("head/w"):
+        return pick(f, TP)                  # column-parallel logits
+    # ---- norms, scalars, small vectors ----
+    if "norm" in path or "/ln_" in path or path.endswith("/g") \
+            or path.endswith("mu_x") or path.endswith("/mu") \
+            or path.endswith("mu_k") or path.endswith("mu_r") \
+            or path.endswith("w0") or path.endswith("/u"):
+        return P()
+    # ---- attention ----
+    if "/attn/" in path:
+        if path.endswith("wo/w"):
+            return pick(TP, f)              # row-parallel out-proj
+        if path.endswith("/w"):
+            return pick(f, TP)              # wq/wk/wv column-parallel
+        if path.endswith("/b"):
+            return pick(TP)                 # qkv bias follows columns
+        return P()
+    # ---- MoE ----
+    if "/moe/" in path:
+        if "router" in path:
+            return P()
+        if moe_ep:                          # expert-parallel: E over "model"
+            if path.endswith("down"):
+                return pick(TP, None, f)    # (E, dff, d)
+            return pick(TP, f, None)        # gate/up (E, d, dff)
+        if path.endswith("down"):
+            return pick(None, TP, f)        # (E, dff, d)
+        return pick(None, f, TP)            # gate/up (E, d, dff)
+    # ---- MLP ----
+    if "/mlp/" in path:
+        if path.endswith("down/w"):
+            return pick(TP, f)
+        if path.endswith("/w"):
+            return pick(f, TP)
+        return pick(TP) if ndim == 1 else P()
+    # ---- Mamba ----
+    if "/mamba/" in path:
+        if path.endswith("in_proj/w"):
+            return pick(f, TP)
+        if path.endswith("out_proj/w"):
+            return pick(TP, f)
+        if path.endswith("conv_w"):
+            return pick(None, TP)
+        if path.endswith("conv_b") or path.endswith("dt_bias") \
+                or path.endswith("D"):
+            return pick(TP)
+        if path.endswith("x_proj/w"):
+            return pick(TP, None)           # row-parallel, small output
+        if path.endswith("dt_proj/w"):
+            return pick(None, TP)
+        if path.endswith("A_log"):
+            return pick(TP, None)
+        return P()
+    # ---- RWKV ----
+    if "/rwkv_tm/" in path or "/rwkv_cm/" in path:
+        if path.endswith("wo/w") or path.endswith("wv/w") and "/rwkv_cm/" in path:
+            return pick(TP, f)
+        if path.endswith("/w"):
+            # wr/wk/wv/wg (d,d) col-parallel; cm wk (d,dff) col-parallel
+            return pick(f, TP)
+        return P()                          # loras, mus, gains
+    # in_norm (embeds frontend) and anything else small
+    return P()
+
+
+def param_specs(params: Any, mesh: Mesh,
+                fsdp_over_pod: bool = True, mode: str = "train",
+                fsdp_only: bool = False, moe_ep: bool = False) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs).
+
+    mode="train": FSDP over the data axes + TP over "model" (default), or —
+    with ``fsdp_only`` — FSDP over *all* axes and no TP (wins whenever
+    per-layer weight-gather bytes < per-layer activation-gather bytes; see
+    EXPERIMENTS.md §Perf).
+    mode="serve": TP only — weights stay resident so decode steps never
+    re-gather them (per-token FSDP weight gathers would dominate decode).
+    For the ``fsdp_only`` (small) archs, serve weights are FULLY REPLICATED:
+    they fit per-chip in bf16, and prefill then runs with zero weight or
+    activation collectives (batch x sequence sharding instead).
+    """
+    d_ax = data_axes(mesh)
+    if mode == "prefill" and fsdp_only:
+        # replicate: prefill reads each weight once per ~32k tokens, so the
+        # read cost amortizes and all TP/SP collectives disappear; decode
+        # must NOT replicate (it would re-read every weight per token)
+        return jax.tree.map(
+            lambda leaf: P(*((None,) * leaf.ndim)), params)
+    if mode in ("serve", "prefill", "decode"):
+        # resident (TP-only) weights unless the model is too big for one
+        # TP shard per chip (grok-1: 628 GB bf16 / 16 = 39 GB > HBM) — then
+        # fall back to 2D (FSDP x TP) with per-step gathers
+        tp_size = int(mesh.shape.get(TP, 1)) if hasattr(mesh.shape, "get")             else int(dict(zip(mesh.axis_names,
+                              mesh.devices.shape))[TP])
+        bytes_per_dev = sum(
+            int(np.prod(x.shape)) * 2 for x in jax.tree.leaves(params)
+        ) / tp_size
+        if bytes_per_dev <= 10e9:
+            fsdp = None
+        else:
+            fsdp = d_ax if len(d_ax) > 1 else (d_ax[-1] if d_ax else None)
+    elif fsdp_only:
+        fsdp = tuple(d_ax) + (TP,)
+    else:
+        fsdp = d_ax if (fsdp_over_pod and len(d_ax) > 1) else \
+            (d_ax[-1] if d_ax else None)
+    stacked = not isinstance(params.get("layers"), (list, tuple)) \
+        if isinstance(params, dict) else True
+    drop_tp = (mode == "train" and fsdp_only)
+
+    def one(path, leaf):
+        p = _path_str(path)
+        nd = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+        in_layers = p.startswith("layers")
+        if in_layers and stacked:
+            spec = _param_spec(p, nd - 1, fsdp, moe_ep)
+            spec = P(*((None,) + tuple(spec)))
+        else:
+            spec = _param_spec(p, nd, fsdp, moe_ep)
+        if drop_tp:  # no tensor parallelism: TP appears only inside `fsdp`
+            spec = P(*(None if ax == TP else ax for ax in tuple(spec)))
+        return fit_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_specs(batch: Any, mesh: Mesh, all_axes: bool = False,
+                seq_over_model: bool = False) -> Any:
+    """Tokens/labels (B, S) or embeds (B, S, d): batch over the data axes —
+    or over *every* axis for fsdp_only training (no TP: the model axis is
+    just more data parallelism).  ``seq_over_model`` additionally shards the
+    sequence dim over "model" (replicated-weight prefill)."""
+    if all_axes:
+        dp = tuple(mesh.axis_names)
+    else:
+        d_ax = data_axes(mesh)
+        dp = d_ax if len(d_ax) > 1 else d_ax[0]
+    seq = TP if (seq_over_model and not all_axes) else None
+
+    def one(path, leaf):
+        nd = leaf.ndim
+        p = _path_str(path)
+        if p.endswith("positions") and nd == 3:    # (3, B, S) M-RoPE
+            spec = P(None, dp, seq)
+        elif nd >= 2:
+            spec = P(*((dp, seq) + (None,) * (nd - 2)))
+        else:
+            spec = P(dp)
+        return fit_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_specs(cfg, cache: Any, mesh: Mesh, B: int) -> Any:
+    """Decode-state sharding. Attention KV (B, S, Kv, hd): batch over data
+    axes (if divisible) and sequence over "model"; if batch is too small,
+    sequence is sharded over every axis.  SSM/RWKV states: feature dims over
+    "model", batch over data axes when divisible."""
+    d_ax = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in d_ax]))
+    tpsize = int(mesh.shape[TP])
+    dp = d_ax if len(d_ax) > 1 else d_ax[0]
+    batch_ok = B % dsize == 0 and B >= dsize
+    stacked = cfg.scan_layers and cfg.is_homogeneous()
+
+    def fit(spec, shape):
+        return tuple(fit_spec(spec, shape, mesh))
+
+    def one(path, leaf):
+        p = _path_str(path)
+        nd = leaf.ndim - (1 if stacked else 0)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        if p.endswith("/k") or p.endswith("/v") or p == "k" or p == "v":
+            if batch_ok:
+                spec = (dp, TP, None, None)          # (B, S, Kv, hd)
+            else:
+                seq_all = tuple(d_ax) + (TP,)
+                spec = (None, seq_all, None, None)
+        elif "ssm" in p:                             # (B, di, ds)
+            spec = ((dp if batch_ok else None), TP, None)
+        elif "conv" in p:                            # (B, dc-1, di)
+            spec = ((dp if batch_ok else None), None, TP)
+        elif "wkv" in p:                             # (B, H, hd, hd)
+            spec = ((dp if batch_ok else None), TP, None, None)
+        elif p.endswith("x_tm") or p.endswith("x_cm"):  # (B, d)
+            spec = ((dp if batch_ok else None), None)
+        else:
+            spec = (None,) * nd
+        spec = fit(spec, shape)
+        if stacked:
+            spec = (None,) + tuple(spec)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,1 @@
+from .engine import Engine, EngineConfig, Request, ResponseCacheNT  # noqa: F401

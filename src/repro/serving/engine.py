@@ -1,0 +1,292 @@
+"""Multi-tenant LLM serving engine driven by the SuperNIC policy core.
+
+Mapping of the paper's mechanisms onto the serving runtime:
+
+  paper                         | engine
+  ------------------------------+------------------------------------------
+  packet                        | request (prompt -> generated tokens)
+  NT chain                      | ingress -> cache-NT -> prefill -> decode
+  per-NT credits                | decode slots (continuous batching)
+  FPGA partial reconfiguration  | XLA compile of a new decode batch shape
+  victim cache of bitstreams    | the jit executable cache (kept warm)
+  pre-launch                    | ahead-of-time compile of expected shapes
+  monitored-demand DRF          | per-epoch token-budget admission control
+  NT auto-scaling               | growing/shrinking the decode batch shape
+  paged virtual memory (vmem)   | KV slot/page accounting + host swap-out
+
+The engine is single-process (CPU tests use tiny configs) but every policy
+decision routes through ``repro.core`` so the exact code that reproduces the
+paper's figures schedules real model computation here.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.drf import drf_allocate
+from repro.core.vmem import VirtualMemory
+from repro.models import model as MD
+
+
+@dataclass
+class Request:
+    rid: int
+    tenant: str
+    prompt: np.ndarray               # (S,) int32
+    max_new: int = 16
+    t_submit: float = 0.0
+    t_first: float | None = None     # first-token time
+    t_done: float | None = None
+    out: list = field(default_factory=list)
+    cached: bool = False
+
+    @property
+    def latency(self) -> float:
+        return (self.t_done or 0.0) - self.t_submit
+
+
+@dataclass
+class EngineConfig:
+    max_len: int = 128
+    batch_sizes: tuple = (1, 2, 4, 8)   # compilable decode shapes (regions)
+    page_tokens: int = 16               # KV page granularity (vmem)
+    mem_pages: int = 64                 # physical KV pages on "board"
+    epoch_requests: int = 8             # DRF epoch, measured in admissions
+    cache_entries: int = 64             # response-cache NT capacity (FIFO)
+    enable_cache_nt: bool = True
+    scale_up_backlog: float = 2.0       # backlog/capacity ratio to scale out
+    scale_down_idle: float = 0.25
+
+
+class ResponseCacheNT:
+    """The paper's caching NT (§6.1): FIFO keyed by prompt bytes."""
+
+    def __init__(self, entries: int):
+        self.entries = entries
+        self.data: OrderedDict[bytes, list] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, prompt: np.ndarray):
+        key = prompt.tobytes()
+        if key in self.data:
+            self.hits += 1
+            return list(self.data[key])
+        self.misses += 1
+        return None
+
+    def put(self, prompt: np.ndarray, out: list):
+        key = prompt.tobytes()
+        if key not in self.data and len(self.data) >= self.entries:
+            self.data.popitem(last=False)            # FIFO (paper's choice)
+        self.data[key] = list(out)
+
+
+class Engine:
+    def __init__(self, cfg, ecfg: EngineConfig, params=None, seed: int = 0,
+                 tenant_weights: dict | None = None):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.params = params if params is not None else MD.init_params(
+            jax.random.PRNGKey(seed), cfg)
+        # --- vmem: KV pages (slot -> pages); over-subscription swaps to host
+        self.vmem = VirtualMemory(ecfg.mem_pages * (2 << 20))
+        self.vmem.page_bytes = 2 << 20
+        # --- decode "regions": compiled step per batch shape (PR analogue)
+        self._decode_fns: dict[int, object] = {}
+        self._prefill_fns: dict[int, object] = {}
+        self.compile_log: list[tuple[str, int, float]] = []
+        self.active_bs = min(ecfg.batch_sizes)
+        # --- request plumbing
+        self.queues: dict[str, deque] = {}
+        self.weights = tenant_weights or {}
+        self.admitted: dict[str, int] = {}
+        self.demand: dict[str, int] = {}
+        self.budget: dict[str, float] = {}
+        self.done: list[Request] = []
+        self.cache_nt = ResponseCacheNT(ecfg.cache_entries)
+        self.rid = 0
+        self.epoch_count = 0
+        # slots: rid -> (cache, pos, request)
+        self.slots: list = []
+
+    # ------------------------------------------------------------ compile --
+    def _get_fn(self, kind: str, bs: int):
+        store = self._decode_fns if kind == "decode" else self._prefill_fns
+        if bs not in store:                       # "PR": compile a region
+            t0 = time.time()
+            if kind == "decode":
+                fn = jax.jit(lambda p, c, b, t: MD.apply_decode(
+                    p, self.cfg, c, b, t))
+            else:
+                fn = jax.jit(lambda p, b: MD.apply_prefill(
+                    p, self.cfg, b, max_len=self.ecfg.max_len))
+            store[bs] = fn
+            self.compile_log.append((kind, bs, time.time() - t0))
+        return store[bs]
+
+    def prelaunch(self):
+        """Paper §4.4 pre-launch: compile expected shapes before traffic."""
+        for bs in self.ecfg.batch_sizes:
+            b = {"tokens": jnp.zeros((bs, 8), jnp.int32)} \
+                if self.cfg.frontend == "tokens" else \
+                {"embeds": jnp.zeros((bs, 8, self.cfg.d_model), jnp.float32)}
+            self._get_fn("prefill", bs)(self.params, b)
+            cache = MD.init_cache(self.cfg, bs, self.ecfg.max_len,
+                                  jnp.float32)
+            step = {"tokens": jnp.zeros((bs, 1), jnp.int32)} \
+                if self.cfg.frontend == "tokens" else \
+                {"embeds": jnp.zeros((bs, 1, self.cfg.d_model), jnp.float32)}
+            self._get_fn("decode", bs)(self.params, cache, step, jnp.int32(8))
+
+    # ------------------------------------------------------------ ingress --
+    def submit(self, tenant: str, prompt: np.ndarray, max_new: int = 16):
+        self.rid += 1
+        req = Request(self.rid, tenant, np.asarray(prompt, np.int32),
+                      max_new, t_submit=time.time())
+        self.queues.setdefault(tenant, deque()).append(req)
+        self.demand[tenant] = self.demand.get(tenant, 0) + len(prompt) + max_new
+        return req
+
+    # ---------------------------------------------------------------- DRF --
+    def _run_drf(self):
+        """Monitored-demand DRF over (token-compute, kv-pages) per tenant."""
+        demands = {}
+        for t, q in self.queues.items():
+            if not q:
+                continue
+            toks = sum(len(r.prompt) + r.max_new for r in q)
+            pages = sum((len(r.prompt) + r.max_new + self.ecfg.page_tokens - 1)
+                        // self.ecfg.page_tokens for r in q)
+            demands[t] = {"tokens": float(toks), "pages": float(pages)}
+        if not demands:
+            return
+        caps = {"tokens": float(self.ecfg.epoch_requests * self.ecfg.max_len),
+                "pages": float(self.ecfg.mem_pages)}
+        res = drf_allocate(demands, caps, self.weights)
+        for t in demands:
+            self.budget[t] = res.alloc[t].get("tokens", 0.0)
+        self.demand = {}
+
+    def _admit(self) -> list[Request]:
+        """Ingress throttling: take requests round-robin within budget.
+        Work-conserving: if budgets admit nothing while work is queued
+        (e.g. one request alone exceeds the fair page share), admit the
+        head-of-line request so the system always makes progress."""
+        self._run_drf()
+        out = []
+        progress = True
+        while progress and len(out) < self.ecfg.epoch_requests:
+            progress = False
+            for t in sorted(self.queues):
+                q = self.queues[t]
+                if not q:
+                    continue
+                cost = len(q[0].prompt) + q[0].max_new
+                if self.budget.get(t, 0.0) >= cost:
+                    self.budget[t] -= cost
+                    out.append(q.popleft())
+                    progress = True
+        if not out:
+            for t in sorted(self.queues, key=lambda t: (
+                    self.queues[t][0].t_submit if self.queues[t] else 1e30)):
+                if self.queues[t]:
+                    out.append(self.queues[t].popleft())
+                    break
+        return out
+
+    # ------------------------------------------------------------- engine --
+    def _autoscale(self, backlog: int):
+        """Instance autoscaling: pick the decode batch shape by load."""
+        cap = self.active_bs
+        sizes = sorted(self.ecfg.batch_sizes)
+        if backlog > cap * self.ecfg.scale_up_backlog and cap < sizes[-1]:
+            self.active_bs = sizes[min(sizes.index(cap) + 1, len(sizes) - 1)]
+        elif backlog < cap * self.ecfg.scale_down_idle and cap > sizes[0]:
+            self.active_bs = sizes[max(sizes.index(cap) - 1, 0)]
+
+    def _alloc_pages(self, req: Request) -> bool:
+        n = (len(req.prompt) + req.max_new + self.ecfg.page_tokens - 1) \
+            // self.ecfg.page_tokens
+        self.vmem.register(f"req{req.rid}")
+        try:
+            for i in range(n):
+                self.vmem.access(f"req{req.rid}", i, time.time())
+            return True
+        except Exception:
+            self.vmem.release(f"req{req.rid}")
+            return False
+
+    def step(self):
+        """One engine iteration: admit -> cache NT -> prefill -> decode."""
+        batch = self._admit()
+        now = time.time()
+        # caching NT: hits bypass the model entirely (paper §6.1)
+        todo = []
+        for r in batch:
+            hit = self.cache_nt.get(r.prompt) if self.ecfg.enable_cache_nt \
+                else None
+            if hit is not None:
+                r.out = hit
+                r.cached = True
+                r.t_first = r.t_done = time.time()
+                self.done.append(r)
+            elif self._alloc_pages(r):
+                todo.append(r)
+            else:                                    # no KV memory: requeue
+                self.queues[r.tenant].appendleft(r)
+        backlog = sum(len(q) for q in self.queues.values()) + len(todo)
+        self._autoscale(backlog)
+
+        # prefill + decode in groups of the active batch shape
+        for i in range(0, len(todo), self.active_bs):
+            group = todo[i:i + self.active_bs]
+            self._generate(group)
+        return len(batch)
+
+    def _generate(self, group: list[Request]):
+        if not group:
+            return
+        bs = self.active_bs
+        S = max(len(r.prompt) for r in group)
+        prompts = np.zeros((bs, S), np.int32)
+        for j, r in enumerate(group):
+            prompts[j, S - len(r.prompt):] = r.prompt   # left-pad
+        prefill = self._get_fn("prefill", bs)
+        decode = self._get_fn("decode", bs)
+        logits, cache = prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        # prefill returns argmax token already in steps; here logits (B, V)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        t_first = time.time()
+        max_new = max(r.max_new for r in group)
+        outs = [[] for _ in group]
+        for step_i in range(max_new):
+            for j, r in enumerate(group):
+                if step_i < r.max_new:
+                    outs[j].append(int(tok[j]))
+            if step_i == max_new - 1:
+                break
+            logits, cache = decode(self.params, cache,
+                                   {"tokens": tok[:, None]},
+                                   jnp.int32(S + step_i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for j, r in enumerate(group):
+            r.out = outs[j]
+            r.t_first = t_first
+            r.t_done = time.time()
+            if self.ecfg.enable_cache_nt:
+                self.cache_nt.put(r.prompt, r.out)
+            self.vmem.release(f"req{r.rid}")
+            self.done.append(r)
+
+    def run_until_drained(self, max_iters: int = 1000):
+        for _ in range(max_iters):
+            if not any(self.queues.values()):
+                break
+            self.step()
+        return self.done

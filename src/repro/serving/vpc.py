@@ -1,0 +1,122 @@
+"""Virtual Private Cloud NT chain (paper §6.2, Figure 11):
+firewall -> NAT -> encryption, implemented as real vectorized compute.
+
+All three NFs run batched over packet arrays so the chain is one jitted
+program per batch — the engine/"sNIC" equivalent of placing the chain in a
+single region (no scheduler round trips between NFs).
+
+  - firewall: longest-prefix-match against a rule table (allow/deny);
+  - NAT: source ip/port rewrite from a flow table (hash-indexed);
+  - encrypt: ChaCha20 keystream XOR over payload blocks (the TPU-idiomatic
+    stand-in for the paper's AES NT — see repro.kernels.chacha20).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CONSTANTS = (0x61707865, 0x3320646e, 0x79622d32, 0x6b206574)
+
+
+# =============================================================== firewall ====
+def make_rules(n_rules: int = 32, seed: int = 0):
+    """Random prefix rules: (prefix, mask_len, allow)."""
+    rng = np.random.default_rng(seed)
+    prefixes = rng.integers(0, 2 ** 32, n_rules, dtype=np.uint32)
+    mask_len = rng.integers(8, 25, n_rules)
+    allow = rng.random(n_rules) < 0.5
+    masks = (~np.uint32(0)) << np.uint32(32 - mask_len)
+    return (jnp.asarray(prefixes & masks), jnp.asarray(masks),
+            jnp.asarray(allow))
+
+
+def firewall(headers, rules):
+    """headers: (N, 5) uint32 [src, dst, sport, dport, proto].
+
+    Longest-prefix-match on dst; default allow. Returns (N,) bool."""
+    prefixes, masks, allow = rules
+    dst = headers[:, 1][:, None]                       # (N, 1)
+    hit = (dst & masks[None, :]) == prefixes[None, :]  # (N, R)
+    # longest mask wins: score = mask popcount where hit else -1
+    mlen = jnp.sum(jnp.unpackbits(
+        masks.view(jnp.uint8).reshape(-1, 4), axis=1), axis=1)
+    score = jnp.where(hit, mlen[None, :], -1)
+    best = jnp.argmax(score, axis=1)
+    any_hit = jnp.any(hit, axis=1)
+    return jnp.where(any_hit, allow[best], True)
+
+
+# ==================================================================== NAT ====
+def nat_rewrite(headers, nat_ip: int, salt: int = 0x9e3779b9):
+    """Source NAT: rewrite (src ip, src port) -> (nat_ip, hash(flow)).
+
+    The flow hash is a Fibonacci-style integer mix — a deterministic stand-in
+    for the sNIC's flow-table lookup, fully vectorized."""
+    h = headers.astype(jnp.uint32)
+    flow = h[:, 0] ^ (h[:, 1] * jnp.uint32(2654435761)) \
+        ^ (h[:, 2] << jnp.uint32(16)) ^ h[:, 3] ^ h[:, 4]
+    new_port = ((flow * jnp.uint32(salt)) >> jnp.uint32(16)) & jnp.uint32(0xFFFF)
+    out = h.at[:, 0].set(jnp.uint32(nat_ip))
+    out = out.at[:, 2].set(new_port)
+    return out
+
+
+# ================================================================ encrypt ====
+def _rotl(x, n):
+    return (x << jnp.uint32(n)) | (x >> jnp.uint32(32 - n))
+
+
+def _qr(s, a, b, c, d):
+    s[a] = s[a] + s[b]
+    s[d] = _rotl(s[d] ^ s[a], 16)
+    s[c] = s[c] + s[d]
+    s[b] = _rotl(s[b] ^ s[c], 12)
+    s[a] = s[a] + s[b]
+    s[d] = _rotl(s[d] ^ s[a], 8)
+    s[c] = s[c] + s[d]
+    s[b] = _rotl(s[b] ^ s[c], 7)
+
+
+def chacha20_xor_jnp(data, key, nonce, counter0: int = 1):
+    """Vectorized ChaCha20 over (N, 16) u32 blocks (XLA path; the Pallas
+    kernel in repro.kernels.chacha20 is the TPU version of this NT)."""
+    N = data.shape[0]
+    ctr = jnp.uint32(counter0) + jnp.arange(N, dtype=jnp.uint32)
+    s = [jnp.broadcast_to(jnp.uint32(CONSTANTS[w]), (N,)) for w in range(4)]
+    s += [jnp.broadcast_to(key[w], (N,)) for w in range(8)]
+    s += [ctr] + [jnp.broadcast_to(nonce[w], (N,)) for w in range(3)]
+    init = list(s)
+    for _ in range(10):
+        _qr(s, 0, 4, 8, 12); _qr(s, 1, 5, 9, 13)     # noqa: E702
+        _qr(s, 2, 6, 10, 14); _qr(s, 3, 7, 11, 15)   # noqa: E702
+        _qr(s, 0, 5, 10, 15); _qr(s, 1, 6, 11, 12)   # noqa: E702
+        _qr(s, 2, 7, 8, 13); _qr(s, 3, 4, 9, 14)     # noqa: E702
+    ks = jnp.stack([s[w] + init[w] for w in range(16)], axis=1)
+    return data ^ ks
+
+
+# ================================================================= chain ====
+@functools.partial(jax.jit, static_argnames=("nat_ip", "counter0"))
+def vpc_chain(headers, payload, rules, key, nonce, nat_ip: int = 0x0A000001,
+              counter0: int = 1):
+    """The full firewall -> NAT -> encrypt chain on a packet batch.
+
+    headers: (N, 5) u32; payload: (N, 16) u32 (one 64-byte block/packet).
+    Returns (allow_mask, new_headers, ciphertext)."""
+    allow = firewall(headers, rules)
+    newh = nat_rewrite(headers, nat_ip)
+    ct = chacha20_xor_jnp(payload, key, nonce, counter0)
+    # denied packets keep original header and payload zeroed
+    newh = jnp.where(allow[:, None], newh, headers)
+    ct = jnp.where(allow[:, None], ct, jnp.zeros_like(ct))
+    return allow, newh, ct
+
+
+def make_packets(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    headers = rng.integers(0, 2 ** 32, (n, 5), dtype=np.uint32)
+    payload = rng.integers(0, 2 ** 32, (n, 16), dtype=np.uint32)
+    return jnp.asarray(headers), jnp.asarray(payload)

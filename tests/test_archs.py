@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced config, one forward/train/decode step
+on CPU, asserting output shapes and no NaNs (assignment deliverable f)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import (apply_decode, apply_prefill, apply_train,
+                          dummy_batch, init_cache, init_params)
+
+B, S = 2, 64
+
+
+@pytest.fixture(scope="module", params=configs.ARCH_NAMES)
+def arch(request):
+    cfg = configs.get_tiny_config(request.param)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_full_config_matches_assignment(arch):
+    cfg, _ = arch
+    full = configs.get_config(cfg.name)
+    assert full.name == cfg.name and full.family == cfg.family
+    assert full.n_layers >= 24 or full.family in ("moe",)
+    # param count sanity against the advertised scale
+    n = full.param_counts()["total"]
+    expected = {"stablelm-12b": 12e9, "yi-6b": 6e9, "qwen3-8b": 8e9,
+                "qwen2.5-32b": 32e9, "musicgen-medium": 1.5e9,
+                "rwkv6-3b": 3e9, "grok-1-314b": 314e9,
+                "granite-moe-1b-a400m": 1.3e9, "qwen2-vl-2b": 2e9,
+                "jamba-v0.1-52b": 52e9}[cfg.name]
+    assert 0.5 * expected < n < 1.8 * expected, (cfg.name, n, expected)
+
+
+def test_train_step(arch):
+    cfg, params = arch
+    batch = dummy_batch(cfg, B, S, "train")
+    loss, metrics = jax.jit(lambda p, b: apply_train(p, cfg, b))(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), (cfg.name, metrics)
+    assert metrics["xent"] > 0
+
+
+def test_grad_step(arch):
+    cfg, params = arch
+    batch = dummy_batch(cfg, B, S, "train")
+    g = jax.jit(jax.grad(lambda p: apply_train(p, cfg, batch)[0]))(params)
+    flat = jax.tree.leaves(g)
+    assert all(jnp.all(jnp.isfinite(x)) for x in flat), cfg.name
+    # at least one non-zero gradient leaf
+    assert any(float(jnp.max(jnp.abs(x))) > 0 for x in flat), cfg.name
+
+
+def test_prefill_decode_consistency(arch):
+    """Prefill(S tokens) then decode token S must agree with a full forward."""
+    cfg, params = arch
+    max_len = S + 8
+    batch = dummy_batch(cfg, B, S, "serve")
+    logits_p, cache = jax.jit(
+        lambda p, b: apply_prefill(p, cfg, b, max_len=max_len))(params, batch)
+    assert logits_p.shape == (B, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits_p)), cfg.name
+
+    # one decode step
+    if cfg.frontend == "tokens":
+        step = {"tokens": jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)}
+    else:
+        step = {"embeds": jnp.ones((B, 1, cfg.d_model), jnp.float32) * 0.01}
+    logits_d, cache = jax.jit(
+        lambda p, c, b: apply_decode(p, cfg, c, b, jnp.int32(S)))(
+        params, cache, step)
+    assert logits_d.shape == (B, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits_d)), cfg.name
+
+
+def test_decode_matches_train_forward(arch):
+    """Teacher-forced decode for 8 tokens == sliced full-sequence forward."""
+    cfg, params = arch
+    n = 8
+    batch = dummy_batch(cfg, B, n, "serve")
+    # full forward logits at every position
+    from repro.models.model import forward_hidden
+    from repro.models.layers import norm_apply, linear
+    x, _ = jax.jit(lambda p, b: forward_hidden(p, cfg, b))(params, batch)
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    full_logits = x @ params["head"]["w"]                      # (B, n, V)
+
+    # token-by-token decode from an empty cache
+    cache = init_cache(cfg, B, n, jnp.float32)
+    outs = []
+    dec = jax.jit(lambda p, c, b, t: apply_decode(p, cfg, c, b, t))
+    for t in range(n):
+        if cfg.frontend == "tokens":
+            step = {"tokens": batch["tokens"][:, t:t + 1]}
+        else:
+            step = {"embeds": batch["embeds"][:, t:t + 1]}
+        lg, cache = dec(params, cache, step, jnp.int32(t))
+        outs.append(lg)
+    dec_logits = jnp.stack(outs, axis=1)
+    assert jnp.allclose(full_logits, dec_logits, atol=2e-2, rtol=2e-2), (
+        cfg.name, float(jnp.max(jnp.abs(full_logits - dec_logits))))
+
+
+def test_scan_unroll_equivalence():
+    """scan-over-layers and unrolled stacks compute the same function."""
+    cfg_u = configs.get_tiny_config("yi-6b")
+    cfg_s = cfg_u.replace(scan_layers=True)
+    params_u = init_params(jax.random.PRNGKey(7), cfg_u)
+    # restack the same weights for the scan variant
+    params_s = dict(params_u)
+    params_s["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                      *params_u["layers"])
+    batch = dummy_batch(cfg_u, B, S, "train")
+    lu, _ = apply_train(params_u, cfg_u, batch)
+    ls, _ = apply_train(params_s, cfg_s, batch)
+    assert jnp.allclose(lu, ls, atol=1e-5), (float(lu), float(ls))

@@ -1,0 +1,347 @@
+"""Unit + behaviour tests for the SuperNIC core policy library."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (PAPER, SNIC, ChainProgram, EventSim, NTDag, NTSpec,
+                        OutOfMemory, SNICConfig, VirtualMemory, analyze,
+                        drf_allocate, enumerate_programs, make_rack,
+                        rack_analysis)
+from repro.core.regions import RegionManager, RegionState
+from repro.core.sim import GBPS, MS, US, poisson_source
+
+SPECS = {f"NT{i}": NTSpec(f"NT{i}", max_gbps=100.0, fixed_ns=100.0)
+         for i in range(1, 9)}
+
+
+def chain_dag(uid, tenant, names):
+    return NTDag(uid, tenant, ((tuple(names),),))
+
+
+def mk_snic(sim, mode="snic", **kw):
+    kw.setdefault("enable_drf", False)
+    kw.setdefault("enable_autoscale", False)
+    return SNIC(sim, SNICConfig(mode=mode, **kw), SPECS)
+
+
+# ==================================================================== DRF ====
+class TestDRF:
+    def test_classic_two_tenant(self):
+        # Ghodsi et al. example: A wants (1 CPU, 4 GB), B wants (3 CPU, 1 GB)
+        # of (9 CPU, 18 GB): A -> 3 tasks, B -> 2 tasks at equilibrium.
+        demands = {"A": {"cpu": 10 * 1, "mem": 10 * 4},
+                   "B": {"cpu": 10 * 3, "mem": 10 * 1}}
+        res = drf_allocate(demands, {"cpu": 9, "mem": 18})
+        a_tasks = res.alloc["A"]["cpu"] / 1
+        b_tasks = res.alloc["B"]["cpu"] / 3
+        assert a_tasks == pytest.approx(3, abs=0.05)
+        assert b_tasks == pytest.approx(2, abs=0.05)
+        assert res.dominant["A"] == "mem" and res.dominant["B"] == "cpu"
+
+    def test_weighted(self):
+        demands = {"A": {"bw": 100.0}, "B": {"bw": 100.0}}
+        res = drf_allocate(demands, {"bw": 90.0}, weights={"A": 2.0, "B": 1.0})
+        assert res.alloc["A"]["bw"] == pytest.approx(60.0, rel=0.02)
+        assert res.alloc["B"]["bw"] == pytest.approx(30.0, rel=0.02)
+
+    def test_undemanding_tenant_fully_granted(self):
+        demands = {"A": {"bw": 1000.0}, "B": {"bw": 1.0}}
+        res = drf_allocate(demands, {"bw": 100.0})
+        assert res.alloc["B"]["bw"] == pytest.approx(1.0, rel=0.01)
+        assert res.alloc["A"]["bw"] <= 100.0
+
+    def test_work_conserving(self):
+        demands = {"A": {"bw": 80.0}, "B": {"bw": 80.0}}
+        res = drf_allocate(demands, {"bw": 100.0})
+        total = res.alloc["A"]["bw"] + res.alloc["B"]["bw"]
+        assert total == pytest.approx(100.0, rel=0.02)
+
+    def test_multi_resource_nt_dimension(self):
+        # A saturates NT1, B saturates NT2: both should get ~full demand
+        demands = {"A": {"nt:NT1": 100.0, "ingress": 10.0},
+                   "B": {"nt:NT2": 100.0, "ingress": 10.0}}
+        res = drf_allocate(demands, {"nt:NT1": 100.0, "nt:NT2": 100.0,
+                                     "ingress": 100.0})
+        assert res.scale("A") == pytest.approx(1.0, abs=0.01)
+        assert res.scale("B") == pytest.approx(1.0, abs=0.01)
+
+
+# =================================================================== vmem ====
+class TestVMem:
+    def test_on_demand_alloc_and_hit(self):
+        vm = VirtualMemory(8 << 21)  # 8 pages
+        vm.register("a")
+        lat = vm.access("a", 0, 0.0)
+        assert lat >= 100.0 and vm.resident_pages("a") == 1
+        assert vm.access("a", 0, 1.0) == pytest.approx(100.0)
+
+    def test_isolation(self):
+        vm = VirtualMemory(8 << 21)
+        vm.register("a")
+        with pytest.raises(PermissionError):
+            vm.access("b", 0, 0.0)
+
+    def test_oversubscription_swaps_lru(self):
+        vm = VirtualMemory(4 << 21)  # 4 frames
+        vm.register("a"), vm.register("b")
+        for i in range(3):
+            vm.access("a", i, float(i))
+        vm.access("b", 0, 10.0)
+        assert not vm.free_frames
+        # b's next page must swap out a's LRU page (vpage 0)
+        lat = vm.access("b", 1, 11.0)
+        assert lat >= vm.swap_ns
+        assert vm.stats.swap_outs == 1
+        assert vm.tables["a"][0].swapped
+        # touching the swapped page swaps it back in
+        lat = vm.access("a", 0, 12.0)
+        assert lat >= 2 * vm.swap_ns  # evict someone + swap in
+        assert vm.stats.swap_ins == 1
+
+    def test_quota_denies(self):
+        vm = VirtualMemory(8 << 21)
+        vm.register("a")
+        vm.quota["a"] = 2
+        vm.access("a", 0, 0.0), vm.access("a", 1, 0.0)
+        with pytest.raises(OutOfMemory):
+            vm.access("a", 2, 0.0)
+
+    def test_no_remote_space_rejects(self):
+        vm = VirtualMemory(2 << 21, remote_free=lambda: False)
+        vm.register("a")
+        vm.access("a", 0, 0.0), vm.access("a", 1, 0.0)
+        with pytest.raises(OutOfMemory):
+            vm.access("a", 2, 0.0)
+
+    def test_release_frees(self):
+        vm = VirtualMemory(4 << 21)
+        vm.register("a")
+        for i in range(4):
+            vm.access("a", i, 0.0)
+        assert vm.release("a") == 4
+        assert len(vm.free_frames) == 4
+
+
+# ================================================================ regions ====
+class TestRegions:
+    def test_bitstream_enumeration(self):
+        dags = [chain_dag(1, "u1", ("NT1", "NT2", "NT3"))]
+        progs = enumerate_programs(dags, SPECS, region_slots=2)
+        names = {p.names for p in progs}
+        assert ("NT1", "NT2") in names and ("NT2", "NT3") in names
+        assert ("NT1", "NT2", "NT3") not in names  # exceeds region
+        assert ("NT1",) in names
+
+    def test_victim_cache_revival_skips_pr(self):
+        rm = RegionManager(2, 4, SPECS, pr_ns=PAPER.PR_NS)
+        p1 = ChainProgram(("NT1", "NT2"))
+        r1 = rm.launch(p1, 0.0)
+        assert r1.did_pr and r1.ready_ns == PAPER.PR_NS
+        rm.finish_pr(r1.region)
+        rm.deschedule(r1.region, 1.0 * MS)
+        # revival: instant, no PR
+        r2 = rm.launch(p1, 2.0 * MS)
+        assert r2.victim_revived and not r2.did_pr
+        assert r2.ready_ns == 2.0 * MS
+        assert rm.pr_count == 1
+
+    def test_policy_ladder_free_then_victim_then_ctx(self):
+        rm = RegionManager(2, 4, SPECS, pr_ns=1000.0)
+        a = rm.launch(ChainProgram(("NT1",)), 0.0); rm.finish_pr(a.region)
+        b = rm.launch(ChainProgram(("NT2",)), 0.0); rm.finish_pr(b.region)
+        rm.deschedule(b.region, 10.0)  # b is a victim now
+        c = rm.launch(ChainProgram(("NT3",)), 20.0)
+        assert c.region is b.region and not c.context_switched
+        rm.finish_pr(c.region)
+        d = rm.launch(ChainProgram(("NT4",)), 30.0)
+        assert d.context_switched  # no free/victim left
+
+    def test_no_context_switch_flag(self):
+        rm = RegionManager(1, 4, SPECS, pr_ns=1000.0)
+        a = rm.launch(ChainProgram(("NT1",)), 0.0); rm.finish_pr(a.region)
+        b = rm.launch(ChainProgram(("NT2",)), 1.0,
+                      allow_context_switch=False)
+        assert b.region is None
+
+    def test_load_balanced_pick(self):
+        rm = RegionManager(2, 4, SPECS, pr_ns=0.0)
+        a = rm.launch(ChainProgram(("NT1",)), 0.0); rm.finish_pr(a.region)
+        b = rm.launch(ChainProgram(("NT1",)), 0.0); rm.finish_pr(b.region)
+        a.region.instances[0].busy_until_ns = 500.0
+        pick = rm.find_program(("NT1",), now_ns=0.0)
+        assert pick is b.region
+
+
+# ============================================================== scheduler ====
+class TestScheduler:
+    def test_chain_single_sched_visit(self):
+        """sNIC mode: a 4-NT chain is one scheduler visit (§4.2)."""
+        sim = EventSim()
+        nic = mk_snic(sim)
+        dag = chain_dag(1, "u1", ("NT1", "NT2", "NT3", "NT4"))
+        nic.deploy([dag], programs=[ChainProgram(("NT1", "NT2", "NT3", "NT4"))])
+        sim.run(PAPER.PR_NS + 1)  # let prelaunch PR finish
+        done = []
+        nic.done_hook = lambda p: done.append(p)
+        nic.inject("u1", 1, 1000)
+        sim.run(sim.now + 1 * MS)
+        assert len(done) == 1
+        assert done[0].sched_visits == 1
+
+    def test_panic_vs_chain_latency_under_load(self):
+        """PANIC bounces between NTs under credit contention -> higher
+        latency and more scheduler visits (Fig 15)."""
+        res = {}
+        for mode in ("snic", "panic"):
+            sim = EventSim()
+            nic = mk_snic(sim, mode=mode, credits=2)
+            names = ("NT1", "NT2", "NT3", "NT4", "NT5")
+            dag = chain_dag(1, "u1", names)
+            nic.deploy([dag], programs=[ChainProgram(names)])
+            sim.run(PAPER.PR_NS + 1)
+            poisson_source(sim, rate_gbps=90.0, mean_bytes=1500, tenant="u1",
+                           dag_uid=1, sink=nic.inject, seed=3,
+                           until_ns=sim.now + 2 * MS)
+            sim.run(sim.now + 4 * MS)
+            st = nic.stats["u1"]
+            visits = st.pkts_done and sum(
+                1 for _ in st.latencies_ns)  # completed count
+            res[mode] = (st.mean_latency_us(), st.pkts_done)
+        assert res["panic"][0] > res["snic"][0]
+
+    def test_fork_join_parallelism(self):
+        """NT-level parallelism: two parallel branches then a join (Fig 16)."""
+        sim = EventSim()
+        nic = mk_snic(sim)
+        # slow NTs to make serial vs parallel visible
+        slow = {n: NTSpec(n, max_gbps=10.0, fixed_ns=5000.0)
+                for n in ("NT1", "NT2", "NT3", "NT4")}
+        nic.specs = slow
+        nic.regions.specs = slow
+        par = NTDag(1, "u1", ((("NT1", "NT2"), ("NT3",)), (("NT4",),)))
+        ser = chain_dag(2, "u1", ("NT1", "NT2", "NT3", "NT4"))
+        nic.deploy([par, ser])
+        sim.run(PAPER.PR_NS * 10)
+        lat = {}
+        for uid, tag in ((1, "par"), (2, "ser")):
+            done = []
+            nic.done_hook = lambda p: done.append(p)
+            nic.inject("u1", uid, 1000)
+            sim.run(sim.now + 5 * MS)
+            assert done, tag
+            lat[tag] = done[-1].latency_ns
+        # parallel: max(NT1+NT2, NT3) + NT4 < serial: NT1+NT2+NT3+NT4
+        assert lat["par"] < lat["ser"]
+
+    def test_skip_support(self):
+        """A branch using a subsequence of a region's chain works (§4.2)."""
+        sim = EventSim()
+        nic = mk_snic(sim)
+        full = chain_dag(1, "u1", ("NT1", "NT2", "NT3"))
+        skip = chain_dag(2, "u1", ("NT1", "NT3"))  # skips NT2
+        nic.deploy([full, skip],
+                   programs=[ChainProgram(("NT1", "NT2", "NT3"))])
+        sim.run(PAPER.PR_NS + 1)
+        done = []
+        nic.done_hook = lambda p: done.append(p)
+        nic.inject("u1", 2, 500)
+        sim.run(sim.now + 1 * MS)
+        assert len(done) == 1 and done[0].sched_visits == 1
+
+    def test_throughput_vs_credits(self):
+        """More credits -> higher throughput; 8 reaches line rate (Fig 14)."""
+        tput = {}
+        for credits in (1, 8):
+            sim = EventSim()
+            nic = mk_snic(sim, credits=credits)
+            dag = chain_dag(1, "u1", ("NT1",))
+            nic.deploy([dag])
+            sim.run(PAPER.PR_NS + 1)
+            t0 = sim.now
+            poisson_source(sim, rate_gbps=98.0, mean_bytes=1000, tenant="u1",
+                           dag_uid=1, sink=nic.inject, seed=1,
+                           until_ns=t0 + 3 * MS)
+            sim.run(t0 + 3 * MS)
+            tput[credits] = nic.stats["u1"].gbps(sim.now - t0)
+        assert tput[8] > tput[1] * 1.2
+        assert tput[8] > 80.0  # near line rate
+
+    def test_on_demand_launch_buffers_first_packets(self):
+        """On-demand launch pays PR once; packets buffered then served."""
+        sim = EventSim()
+        nic = mk_snic(sim)
+        dag = chain_dag(1, "u1", ("NT1", "NT2"))
+        nic.deploy([dag], prelaunch=False)
+        done = []
+        nic.done_hook = lambda p: done.append(p)
+        nic.inject("u1", 1, 1000)
+        sim.run(sim.now + PAPER.PR_NS * 3)
+        assert len(done) == 1
+        assert done[0].latency_ns >= PAPER.PR_NS  # waited for PR
+
+
+# ============================================================ consolidation ==
+class TestConsolidation:
+    def test_sum_of_peaks_geq_aggregate(self):
+        from repro.core.consolidation import synthetic_trace
+        loads = synthetic_trace(8, 512, seed=1)
+        rep = analyze(loads)
+        assert rep.sum_of_peaks >= rep.peak_of_aggregate
+        assert rep.savings > 1.3  # bursty non-aligned peaks consolidate well
+
+    def test_rack_hierarchy(self):
+        from repro.core.consolidation import synthetic_trace
+        loads = synthetic_trace(64, 512, seed=2)
+        r = rack_analysis(loads, rack_size=8)
+        assert (r["sum_of_endpoint_peaks"] >= r["sum_of_rack_peaks"]
+                >= r["peak_of_aggregate"])
+        assert r["global_saving"] > r["rack_saving"] > 1.0
+
+    def test_fb_trace_quantiles(self):
+        from repro.core.consolidation import fb_kv_load_trace
+        loads = fb_kv_load_trace(4, 4000, seed=3)
+        med = float(np.median(loads))
+        assert 18.0 < med < 30.0  # paper: median 24 Gbps
+
+
+# ================================================================== rack ====
+class TestDistributed:
+    def test_offload_and_migrate_back(self):
+        sim = EventSim()
+        rack = make_rack(sim, 2, SPECS,
+                         cfg_kw=dict(n_regions=1, region_slots=4,
+                                     enable_drf=False,
+                                     enable_autoscale=False))
+        a, b = rack.snics
+        # fill a's only region with dag1, then dag2 must offload to b
+        d1 = chain_dag(1, "u1", ("NT1",))
+        d2 = chain_dag(2, "u2", ("NT2",))
+        a.deploy([d1])
+        sim.run(PAPER.PR_NS + 1)
+        a.inject("u1", 1, 500)          # d1's region is now in active use
+        sim.run(sim.now + 1 * MS)
+        a.deploy([d2], prelaunch=False)
+        done = []
+        a.done_hook = lambda p: done.append(p)
+        b.done_hook = lambda p: done.append(p)
+        a.inject("u2", 2, 800)
+        sim.run(sim.now + PAPER.PR_NS * 3)
+        assert done and done[0].hops == 1          # went via peer
+        assert rack.migrations and rack.migrations[0][1] == "snic0"
+
+    def test_remote_memory_pooling(self):
+        sim = EventSim()
+        rack = make_rack(sim, 2, SPECS, cfg_kw=dict(
+            enable_drf=False, enable_autoscale=False))
+        a = rack.snics[0]
+        a.vmem.n_frames = 2
+        a.vmem.free_frames = [1, 0]
+        a.vmem.register("x")
+        a.vmem.access("x", 0, 0.0)
+        a.vmem.access("x", 1, 0.0)
+        # peer has free memory -> over-subscription allowed
+        lat = a.vmem.access("x", 2, 1.0)
+        assert lat >= a.vmem.swap_ns

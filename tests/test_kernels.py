@@ -1,0 +1,275 @@
+"""Per-kernel allclose vs pure-jnp oracles (interpret mode on CPU) with
+shape/dtype sweeps, plus hypothesis property tests on system invariants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except Exception:  # pragma: no cover
+    HAVE_HYP = False
+
+requires_hyp = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis missing")
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+       jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+# ======================================================== flash attention ====
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,Kv,hd,bq,bk", [
+    (2, 128, 4, 4, 64, 64, 64),     # MHA
+    (2, 256, 8, 2, 64, 64, 128),    # GQA, uneven blocks
+    (1, 512, 4, 1, 128, 128, 128),  # MQA, bigger head
+    (3, 192, 6, 2, 32, 64, 64),     # odd batch, small head
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(B, S, H, Kv, hd, bq, bk, causal, dtype):
+    from repro.kernels.flash_attention import (attention_ref,
+                                               flash_attention_tpu)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(B * S + H), 3)
+    q = rand(k1, (B, S, H, hd), dtype)
+    k = rand(k2, (B, S, Kv, hd), dtype)
+    v = rand(k3, (B, S, Kv, hd), dtype)
+    out = flash_attention_tpu(q, k, v, causal=causal, block_q=bq,
+                              block_k=bk, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_matches_model_fallback():
+    """Kernel and the model's custom-vjp XLA fallback agree."""
+    from repro.kernels.flash_attention import flash_attention_tpu
+    from repro.models.attention import flash_attention
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = rand(k1, (2, 128, 4, 2, 64)[:-1] + (64,), jnp.float32)
+    q = rand(k1, (2, 128, 4, 64), jnp.float32)
+    k = rand(k2, (2, 128, 2, 64), jnp.float32)
+    v = rand(k3, (2, 128, 2, 64), jnp.float32)
+    a = flash_attention_tpu(q, k, v, block_q=64, block_k=64, interpret=True)
+    b = flash_attention(q, k, v, 64, True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_fallback_gradients_match_naive():
+    """custom-vjp backward == autodiff through the naive oracle."""
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.models.attention import flash_attention
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(k1, (1, 64, 4, 32), jnp.float32)
+    k = rand(k2, (1, 64, 2, 32), jnp.float32)
+    v = rand(k3, (1, 64, 2, 32), jnp.float32)
+
+    def loss_fast(args):
+        return jnp.sum(jnp.sin(flash_attention(*args, 32, True)))
+
+    def loss_ref(args):
+        return jnp.sum(jnp.sin(attention_ref(*args, causal=True)))
+
+    gf = jax.grad(loss_fast)((q, k, v))
+    gr = jax.grad(loss_ref)((q, k, v))
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-5, rtol=3e-5)
+
+
+# ================================================================ moe_gmm ====
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,d,f,bc,bf,bd", [
+    (4, 128, 256, 512, 128, 128, 128),
+    (8, 256, 128, 256, 128, 128, 128),
+    (2, 384, 512, 384, 128, 128, 256),
+])
+def test_moe_gmm(E, C, d, f, bc, bf, bd, dtype):
+    from repro.kernels.moe_gmm.kernel import moe_gmm
+    from repro.kernels.moe_gmm.ref import moe_gmm_ref
+    k1, k2 = jax.random.split(jax.random.PRNGKey(E + C))
+    x = rand(k1, (E, C, d), dtype)
+    w = rand(k2, (E, d, f), dtype) * (d ** -0.5)
+    out = moe_gmm(x, w, block_c=bc, block_f=bf, block_d=bd, interpret=True)
+    ref = moe_gmm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+# =============================================================== quantize ====
+@pytest.mark.parametrize("R,D,br", [(64, 128, 32), (256, 512, 256),
+                                    (128, 384, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_roundtrip(R, D, br, dtype):
+    from repro.kernels.quantize.kernel import dequantize_int8, quantize_int8
+    from repro.kernels.quantize.ref import (dequantize_int8_ref,
+                                            quantize_int8_ref)
+    x = rand(jax.random.PRNGKey(R), (R, D), dtype) * 3.0
+    q, s = quantize_int8(x, block_rows=br, interpret=True)
+    qr, sr = quantize_int8_ref(x)
+    if dtype == jnp.float32:
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    else:
+        # coarse bf16 values land on .5 rounding boundaries; kernel-vs-ref
+        # arithmetic order may flip round() by one quantum there
+        assert (np.abs(np.asarray(q, np.int32)
+                       - np.asarray(qr, np.int32)) <= 1).all()
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # round trip error bounded by scale/2 per element
+    xd = dequantize_int8(q, s, jnp.float32, block_rows=br, interpret=True)
+    err = np.abs(np.asarray(xd) - np.asarray(x, np.float32))
+    # theoretical bound scale/2 plus f32 arithmetic slack (x/s*s round trips)
+    bound = np.asarray(sr) * 0.5 * 1.05 + 1e-5
+    assert (err <= bound).all()
+    if dtype == jnp.float32:
+        xdr = dequantize_int8_ref(qr, sr)
+        np.testing.assert_allclose(np.asarray(xd), np.asarray(xdr), rtol=1e-6)
+
+
+@requires_hyp
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 4), st.floats(0.1, 100.0))
+def test_quantize_property(rows8, cols128, scale):
+    """Property: |dequant(quant(x)) - x| <= rowmax/254 for any input."""
+    from repro.kernels.quantize.ref import (dequantize_int8_ref,
+                                            quantize_int8_ref)
+    R, D = rows8 * 8, cols128 * 128
+    x = jax.random.normal(jax.random.PRNGKey(rows8 * 7 + cols128),
+                          (R, D)) * scale
+    q, s = quantize_int8_ref(x)
+    xd = dequantize_int8_ref(q, s)
+    rowmax = np.max(np.abs(np.asarray(x)), axis=1, keepdims=True)
+    bound = rowmax / 254.0 * 1.05 + 1e-5
+    assert (np.abs(np.asarray(xd - x)) <= bound).all()
+
+
+# =============================================================== chacha20 ====
+def test_chacha20_rfc8439_vector():
+    """RFC 8439 §2.3.2 test vector for the block function."""
+    from repro.kernels.chacha20.ref import chacha20_block_ref
+    key = np.arange(0x00010203, dtype=np.uint64)  # placeholder; build below
+    key = np.array([0x03020100, 0x07060504, 0x0b0a0908, 0x0f0e0d0c,
+                    0x13121110, 0x17161514, 0x1b1a1918, 0x1f1e1d1c],
+                   np.uint32)
+    nonce = np.array([0x09000000, 0x4a000000, 0x00000000], np.uint32)
+    ks = chacha20_block_ref(key, nonce, 1)
+    expect = np.array([0xe4e7f110, 0x15593bd1, 0x1fdd0f50, 0xc47120a3,
+                       0xc7f4d1c7, 0x0368c033, 0x9aaa2204, 0x4e6cd4c3,
+                       0x466482d2, 0x09aa9f07, 0x05d7c214, 0xa2028bd9,
+                       0xd19c12b5, 0xb94e16de, 0xe883d0cb, 0x4e3c50a2],
+                      np.uint32)
+    np.testing.assert_array_equal(ks, expect)
+
+
+@pytest.mark.parametrize("N,bn", [(8, 8), (32, 16), (64, 64)])
+def test_chacha20_kernel_vs_ref(N, bn):
+    from repro.kernels.chacha20.kernel import chacha20_xor
+    from repro.kernels.chacha20.ref import chacha20_xor_ref
+    rng = np.random.default_rng(N)
+    data = rng.integers(0, 2 ** 32, (N, 16), dtype=np.uint32)
+    key = rng.integers(0, 2 ** 32, (8,), dtype=np.uint32)
+    nonce = rng.integers(0, 2 ** 32, (3,), dtype=np.uint32)
+    out = chacha20_xor(jnp.asarray(data), jnp.asarray(key),
+                       jnp.asarray(nonce), block_n=bn, interpret=True)
+    ref = chacha20_xor_ref(data, key, nonce)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_chacha20_roundtrip_bytes():
+    from repro.kernels.chacha20.ops import (blocks_to_bytes, bytes_to_blocks,
+                                            encrypt)
+    key = jnp.arange(8, dtype=jnp.uint32) * 7 + 3
+    nonce = jnp.arange(3, dtype=jnp.uint32) + 11
+    msg = b"SuperNIC disaggregates and consolidates network tasks." * 5
+    blocks, n = bytes_to_blocks(msg)
+    ct = encrypt(blocks, key, nonce)
+    assert blocks_to_bytes(ct, n) != msg
+    pt = encrypt(ct, key, nonce)
+    assert blocks_to_bytes(pt, n) == msg
+
+
+# ============================================================= rwkv6 scan ====
+@pytest.mark.parametrize("B,H,S,hd,chunk", [
+    (2, 2, 64, 16, 16), (1, 4, 128, 32, 64), (2, 3, 96, 64, 32)])
+def test_rwkv6_scan(B, H, S, hd, chunk):
+    from repro.kernels.rwkv6_scan.kernel import rwkv6_wkv
+    from repro.kernels.rwkv6_scan.ref import rwkv6_wkv_ref
+    ks = jax.random.split(jax.random.PRNGKey(B * H * S), 5)
+    r = rand(ks[0], (B, H, S, hd), jnp.float32) * 0.5
+    k = rand(ks[1], (B, H, S, hd), jnp.float32) * 0.5
+    v = rand(ks[2], (B, H, S, hd), jnp.float32)
+    w = jax.nn.sigmoid(rand(ks[3], (B, H, S, hd), jnp.float32)) * 0.5 + 0.45
+    u = rand(ks[4], (H, hd), jnp.float32) * 0.1
+    out = rwkv6_wkv(r, k, v, w, u, chunk=chunk, interpret=True)
+    ref = rwkv6_wkv_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv6_kernel_vs_model_layer():
+    """Kernel agrees with the model's chunked XLA wkv_scan."""
+    from repro.kernels.rwkv6_scan.kernel import rwkv6_wkv
+    from repro.models.rwkv6 import wkv_scan
+    B, H, S, hd = 2, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r, k, v = (rand(ks[i], (B, S, H, hd), jnp.float32) for i in range(3))
+    w = jax.nn.sigmoid(rand(ks[3], (B, S, H, hd), jnp.float32)) * 0.4 + 0.5
+    u = rand(ks[4], (H, hd), jnp.float32) * 0.1
+    y_model, _ = wkv_scan(r, k, v, w, u,
+                          jnp.zeros((B, H, hd, hd), jnp.float32), chunk=16)
+    perm = lambda a: a.transpose(0, 2, 1, 3)  # noqa: E731
+    y_kernel = rwkv6_wkv(perm(r), perm(k), perm(v), perm(w), u,
+                         chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(perm(y_kernel)),
+                               np.asarray(y_model), atol=1e-4, rtol=1e-4)
+
+
+# ============================================================= mamba scan ====
+@pytest.mark.parametrize("B,S,di,ds,chunk,bdi", [
+    (2, 64, 128, 16, 32, 128), (1, 128, 256, 8, 64, 128),
+    (2, 96, 64, 16, 32, 64)])
+def test_mamba_scan(B, S, di, ds, chunk, bdi):
+    from repro.kernels.mamba_scan.kernel import mamba_ssm
+    from repro.kernels.mamba_scan.ref import mamba_ssm_ref
+    ks = jax.random.split(jax.random.PRNGKey(B * S + di), 6)
+    x = rand(ks[0], (B, S, di), jnp.float32)
+    dt = jax.nn.softplus(rand(ks[1], (B, S, di), jnp.float32) - 1.0)
+    Bm = rand(ks[2], (B, S, ds), jnp.float32)
+    Cm = rand(ks[3], (B, S, ds), jnp.float32)
+    A = -jnp.exp(rand(ks[4], (di, ds), jnp.float32) * 0.5)
+    D = rand(ks[5], (di,), jnp.float32)
+    out = mamba_ssm(x, dt, Bm, Cm, A, D, chunk=chunk, block_di=bdi,
+                    interpret=True)
+    ref = mamba_ssm_ref(x, dt, Bm, Cm, A, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@requires_hyp
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_mamba_state_decay_property(seed):
+    """Property: with dt*A << 0 (fast decay), the scan forgets history —
+    outputs at t depend only on recent inputs (contractive recurrence)."""
+    from repro.kernels.mamba_scan.ref import mamba_ssm_ref
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    B, S, di, ds = 1, 32, 8, 4
+    x1 = rand(ks[0], (B, S, di), jnp.float32)
+    x2 = x1.at[:, :8].set(rand(ks[5], (B, 8, di), jnp.float32) * 10)
+    dt = jnp.full((B, S, di), 4.0)
+    Bm = rand(ks[2], (B, S, ds), jnp.float32)
+    Cm = rand(ks[3], (B, S, ds), jnp.float32)
+    A = -jnp.ones((di, ds)) * 4.0           # exp(-16) decay per step
+    D = jnp.zeros((di,))
+    y1 = mamba_ssm_ref(x1, dt, Bm, Cm, A, D)
+    y2 = mamba_ssm_ref(x2, dt, Bm, Cm, A, D)
+    np.testing.assert_allclose(np.asarray(y1[:, -1]), np.asarray(y2[:, -1]),
+                               atol=1e-4)

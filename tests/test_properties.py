@@ -1,0 +1,138 @@
+"""Hypothesis property tests on core system invariants."""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except Exception:  # pragma: no cover
+    pytest.skip("hypothesis missing", allow_module_level=True)
+
+from repro.core.drf import drf_allocate
+from repro.core.vmem import OutOfMemory, VirtualMemory
+
+tenants = st.integers(2, 5)
+resources = st.integers(1, 4)
+
+
+@st.composite
+def drf_instance(draw):
+    nt = draw(tenants)
+    nr = draw(resources)
+    caps = {f"r{j}": draw(st.floats(10.0, 1000.0)) for j in range(nr)}
+    demands = {}
+    for i in range(nt):
+        d = {f"r{j}": draw(st.one_of(st.just(0.0), st.floats(0.5, 500.0)))
+             for j in range(nr)}
+        if sum(d.values()) >= 0.5:        # below drf's eps -> filtered out
+            demands[f"t{i}"] = d
+    return demands, caps
+
+
+class TestDRFProperties:
+    @settings(max_examples=80, deadline=None)
+    @given(drf_instance())
+    def test_no_capacity_violated(self, inst):
+        demands, caps = inst
+        res = drf_allocate(demands, caps)
+        for r, cap in caps.items():
+            used = sum(res.alloc[t].get(r, 0.0) for t in res.alloc)
+            assert used <= cap * 1.001 + 1e-6, (r, used, cap)
+
+    @settings(max_examples=80, deadline=None)
+    @given(drf_instance())
+    def test_no_tenant_exceeds_demand(self, inst):
+        demands, caps = inst
+        res = drf_allocate(demands, caps)
+        for t, d in demands.items():
+            for r, v in d.items():
+                assert res.alloc[t].get(r, 0.0) <= v * 1.001 + 1e-6
+
+    @settings(max_examples=80, deadline=None)
+    @given(drf_instance())
+    def test_scale_in_unit_interval(self, inst):
+        demands, caps = inst
+        res = drf_allocate(demands, caps)
+        for t in demands:
+            assert -1e-9 <= res.scale(t) <= 1.0 + 1e-9
+
+    @settings(max_examples=50, deadline=None)
+    @given(drf_instance())
+    def test_sharing_incentive(self, inst):
+        """No active tenant's dominant share falls below 1/n of equal split
+        unless its own demand is already met (DRF sharing-incentive)."""
+        demands, caps = inst
+        res = drf_allocate(demands, caps)
+        n = len(demands)
+        for t in demands:
+            if res.scale(t) >= 1.0 - 1e-6:
+                continue                       # fully satisfied
+            # fluid-limit solver with an iteration cap: allow small slack
+            assert res.dominant_share[t] >= 1.0 / n - 0.05, (
+                t, res.dominant_share[t], n)
+
+    @settings(max_examples=50, deadline=None)
+    @given(drf_instance(), st.floats(1.1, 4.0))
+    def test_weight_monotonicity(self, inst, w):
+        """Raising one tenant's weight never lowers its dominant share."""
+        demands, caps = inst
+        if not demands:
+            return
+        t0 = sorted(demands)[0]
+        base = drf_allocate(demands, caps)
+        up = drf_allocate(demands, caps, weights={t0: w})
+        assert up.dominant_share[t0] >= base.dominant_share[t0] - 0.02
+
+
+@st.composite
+def vmem_trace(draw):
+    frames = draw(st.integers(2, 8))
+    n_nts = draw(st.integers(1, 3))
+    ops = draw(st.lists(
+        st.tuples(st.integers(0, n_nts - 1), st.integers(0, 12)),
+        min_size=1, max_size=60))
+    return frames, n_nts, ops
+
+
+class TestVMemProperties:
+    @settings(max_examples=60, deadline=None)
+    @given(vmem_trace())
+    def test_frames_conserved(self, trace):
+        """free + resident == n_frames after any access pattern, and no two
+        NTs ever own the same frame."""
+        frames, n_nts, ops = trace
+        vm = VirtualMemory(frames << 21)
+        for i in range(n_nts):
+            vm.register(f"nt{i}")
+        t = 0.0
+        for nt, page in ops:
+            t += 1.0
+            try:
+                vm.access(f"nt{nt}", page, t)
+            except OutOfMemory:
+                pass
+            resident = sum(vm.resident_pages(f"nt{i}") for i in range(n_nts))
+            assert resident + len(vm.free_frames) == vm.n_frames
+            owners = [pte.frame for i in range(n_nts)
+                      for pte in vm.tables[f"nt{i}"].values()
+                      if pte.frame >= 0]
+            assert len(owners) == len(set(owners))
+
+    @settings(max_examples=40, deadline=None)
+    @given(vmem_trace())
+    def test_release_restores_all(self, trace):
+        frames, n_nts, ops = trace
+        vm = VirtualMemory(frames << 21)
+        for i in range(n_nts):
+            vm.register(f"nt{i}")
+        t = 0.0
+        for nt, page in ops:
+            t += 1.0
+            try:
+                vm.access(f"nt{nt}", page, t)
+            except OutOfMemory:
+                pass
+        for i in range(n_nts):
+            vm.release(f"nt{i}")
+        assert len(vm.free_frames) == vm.n_frames
+        assert vm.swapped_pages == 0

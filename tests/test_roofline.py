@@ -1,0 +1,48 @@
+"""Roofline math unit tests (pure functions; no compiles)."""
+from __future__ import annotations
+
+import json
+
+from repro.roofline.analysis import HBM_BW, LINK_BW, PEAK_FLOPS, Terms, summarize
+
+
+class TestTerms:
+    def test_dominant_and_fraction(self):
+        t = Terms(compute_s=1.0, memory_s=2.0, collective_s=0.5)
+        assert t.dominant == "memory"
+        assert t.bound_s == 2.0
+        assert t.compute_fraction == 0.5
+
+    def test_compute_bound_ideal(self):
+        t = Terms(compute_s=3.0, memory_s=1.0, collective_s=1.0)
+        assert t.dominant == "compute"
+        assert t.compute_fraction == 1.0
+
+    def test_hardware_constants(self):
+        # v5e: 197 TF/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+        assert PEAK_FLOPS == 197e12
+        assert HBM_BW == 819e9
+        assert LINK_BW == 50e9
+
+
+def test_summarize_table_shape():
+    recs = [dict(arch="a", shape="s", compute_s=1e-3, memory_s=2e-3,
+                 collective_s=3e-3, dominant="collective",
+                 compute_fraction=0.33, useful_flops_ratio=0.9)]
+    md = summarize(recs)
+    lines = md.splitlines()
+    assert lines[0].startswith("| arch ")
+    assert "**collective**" in lines[2]
+    assert "0.33" in lines[2]
+
+
+def test_extrapolation_math():
+    """base + (L/period)*per_period recovers linear-in-depth totals."""
+    L, period = 32, 8
+    per_layer_true, base_true = 7.0, 100.0
+    t1 = base_true + period * per_layer_true
+    t2 = base_true + 2 * period * per_layer_true
+    per_period = t2 - t1
+    base = t1 - per_period
+    total = base + (L / period) * per_period
+    assert total == base_true + L * per_layer_true

@@ -1,0 +1,197 @@
+"""Serving engine + case-study tests (KV store, VPC chain)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.serving.engine import Engine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def engine_cfg():
+    cfg = configs.get_tiny_config("musicgen-medium").replace(
+        frontend="tokens", vocab_size=64)
+    return cfg
+
+
+def prompts(n, lo=4, hi=12, seed=0, vocab=64):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, vocab, rng.integers(lo, hi)).astype(np.int32)
+            for _ in range(n)]
+
+
+class TestEngine:
+    def test_generate_correctness_vs_direct(self, engine_cfg):
+        """Engine output == direct prefill+decode for a single request."""
+        from repro.models import model as MD
+        cfg = engine_cfg
+        eng = Engine(cfg, EngineConfig(batch_sizes=(1,), max_len=64,
+                                       enable_cache_nt=False), seed=1)
+        p = np.arange(3, 9, dtype=np.int32)
+        req = eng.submit("t0", p, max_new=6)
+        eng.run_until_drained()
+        # direct reference
+        logits, cache = MD.apply_prefill(eng.params, cfg,
+                                         {"tokens": jnp.asarray(p)[None]},
+                                         max_len=64)
+        toks = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = len(p)
+        for i in range(6):
+            toks.append(int(tok[0]))
+            if i == 5:
+                break
+            logits, cache = MD.apply_decode(eng.params, cfg, cache,
+                                            {"tokens": tok[:, None]},
+                                            jnp.int32(pos + i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        assert req.out == toks, (req.out, toks)
+
+    def test_cache_nt_hit(self, engine_cfg):
+        eng = Engine(engine_cfg, EngineConfig(batch_sizes=(1,), max_len=64),
+                     seed=2)
+        p = np.arange(3, 9, dtype=np.int32)
+        r1 = eng.submit("t0", p, max_new=4)
+        eng.run_until_drained()
+        r2 = eng.submit("t0", p, max_new=4)
+        eng.run_until_drained()
+        assert not r1.cached and r2.cached
+        assert r2.out == r1.out
+        assert eng.cache_nt.hits == 1
+
+    def test_multi_tenant_drf_fairness(self, engine_cfg):
+        """A flooding tenant must not starve a light tenant (DRF admission):
+        the light tenant's requests all complete within the first epochs."""
+        eng = Engine(engine_cfg, EngineConfig(batch_sizes=(1, 2, 4),
+                                              max_len=64,
+                                              enable_cache_nt=False,
+                                              epoch_requests=4), seed=3)
+        for p in prompts(40, seed=1):
+            eng.submit("heavy", p, max_new=4)
+        for p in prompts(4, seed=2):
+            eng.submit("light", p, max_new=4)
+        for _ in range(6):
+            eng.step()
+        light_done = [r for r in eng.done if r.tenant == "light"]
+        assert len(light_done) >= 2, len(light_done)
+
+    def test_autoscale_batch_shape(self, engine_cfg):
+        """Backlog growth scales the decode batch out; drain scales down
+        ("instance autoscaling"); compile log records the PR analogue."""
+        eng = Engine(engine_cfg, EngineConfig(batch_sizes=(1, 2, 4),
+                                              max_len=64,
+                                              enable_cache_nt=False,
+                                              epoch_requests=8), seed=4)
+        assert eng.active_bs == 1
+        for p in prompts(24, seed=5):
+            eng.submit("t", p, max_new=2)
+        eng.step()
+        assert eng.active_bs > 1
+        eng.run_until_drained()
+        assert any(k == "decode" for k, _, _ in eng.compile_log)
+
+    def test_prelaunch_avoids_inline_compile(self, engine_cfg):
+        eng = Engine(engine_cfg, EngineConfig(batch_sizes=(1, 2), max_len=64),
+                     seed=5)
+        eng.prelaunch()
+        n_compiles = len(eng.compile_log)
+        for p in prompts(4, seed=6):
+            eng.submit("t", p, max_new=2)
+        eng.run_until_drained()
+        assert len(eng.compile_log) == n_compiles  # nothing new compiled
+
+    def test_kv_page_accounting(self, engine_cfg):
+        eng = Engine(engine_cfg, EngineConfig(batch_sizes=(1,), max_len=64,
+                                              mem_pages=4, page_tokens=8,
+                                              enable_cache_nt=False), seed=6)
+        for p in prompts(3, lo=30, hi=34, seed=7):
+            eng.submit("t", p, max_new=16)
+        eng.run_until_drained(max_iters=40)
+        # vmem gets exercised and all pages are released afterwards
+        assert eng.vmem.stats.allocs > 0
+        assert len(eng.vmem.free_frames) == eng.vmem.n_frames
+
+
+class TestKVStore:
+    def test_cache_improves_latency_and_tput(self):
+        from repro.serving.kv_store import run_ycsb
+        base = run_ycsb("clio-snic", workload="C", n_ops=8000, n_keys=20000)
+        cache = run_ycsb("clio-snic-cache", workload="C", n_ops=8000,
+                         n_keys=20000, cache_entries=2048)
+        assert cache.avg_us < base.avg_us
+        assert cache.hits > 0
+        assert cache.kops(cache.done_ns) > base.kops(base.done_ns)
+
+    def test_snic_transport_offload_overhead_small(self):
+        """Paper: sNIC adds only a small overhead over direct Clio."""
+        from repro.serving.kv_store import run_ycsb
+        clio = run_ycsb("clio", workload="C", n_ops=6000)
+        snic = run_ycsb("clio-snic", workload="C", n_ops=6000)
+        assert snic.avg_us < clio.avg_us * 1.35
+
+    def test_replication_nt_cheaper_than_client_side(self):
+        from repro.serving.kv_store import run_ycsb
+        client = run_ycsb("clio", workload="A", n_ops=6000, replication=2)
+        snic = run_ycsb("clio-snic-repl", workload="A", n_ops=6000,
+                        replication=2)
+        assert snic.avg_us < client.avg_us
+
+    def test_zipf_is_skewed(self):
+        from repro.serving.kv_store import zipf_keys
+        ks = zipf_keys(1000, 5000, seed=1)
+        top = sum(1 for k in ks if k < 10)
+        assert top > 1000  # top-1% keys get >20% of accesses
+
+
+class TestVPC:
+    def test_firewall_rules(self):
+        from repro.serving.vpc import firewall
+        import jax.numpy as jnp
+        # one deny-rule for 10.0.0.0/8 (0x0A000000)
+        rules = (jnp.asarray([0x0A000000], jnp.uint32),
+                 jnp.asarray([0xFF000000], jnp.uint32),
+                 jnp.asarray([False]))
+        h_deny = jnp.asarray([[1, 0x0A010203, 2, 3, 4]], jnp.uint32)
+        h_allow = jnp.asarray([[1, 0x0B010203, 2, 3, 4]], jnp.uint32)
+        assert not bool(firewall(h_deny, rules)[0])
+        assert bool(firewall(h_allow, rules)[0])
+
+    def test_nat_deterministic_and_rewrites(self):
+        from repro.serving.vpc import make_packets, nat_rewrite
+        h, _ = make_packets(16, seed=2)
+        out1 = nat_rewrite(h, 0x0A000001)
+        out2 = nat_rewrite(h, 0x0A000001)
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+        assert (np.asarray(out1)[:, 0] == 0x0A000001).all()
+        np.testing.assert_array_equal(np.asarray(out1)[:, 1],
+                                      np.asarray(h)[:, 1])  # dst unchanged
+
+    def test_chacha_jnp_matches_rfc_ref(self):
+        from repro.kernels.chacha20.ref import chacha20_xor_ref
+        from repro.serving.vpc import chacha20_xor_jnp
+        rng = np.random.default_rng(3)
+        data = rng.integers(0, 2 ** 32, (8, 16), dtype=np.uint32)
+        key = rng.integers(0, 2 ** 32, (8,), dtype=np.uint32)
+        nonce = rng.integers(0, 2 ** 32, (3,), dtype=np.uint32)
+        out = chacha20_xor_jnp(jnp.asarray(data), jnp.asarray(key),
+                               jnp.asarray(nonce))
+        np.testing.assert_array_equal(np.asarray(out),
+                                      chacha20_xor_ref(data, key, nonce))
+
+    def test_chain_end_to_end(self):
+        from repro.serving.vpc import make_packets, make_rules, vpc_chain
+        h, p = make_packets(64, seed=4)
+        rules = make_rules(8, seed=5)
+        key = jnp.arange(8, dtype=jnp.uint32)
+        nonce = jnp.arange(3, dtype=jnp.uint32)
+        allow, newh, ct = vpc_chain(h, p, rules, key, nonce)
+        assert allow.shape == (64,)
+        # encryption is invertible for allowed packets
+        from repro.serving.vpc import chacha20_xor_jnp
+        pt = chacha20_xor_jnp(ct, key, nonce)
+        ok = np.asarray(allow)
+        np.testing.assert_array_equal(np.asarray(pt)[ok],
+                                      np.asarray(p)[ok])
