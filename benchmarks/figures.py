@@ -2,10 +2,12 @@
 results (also printed as CSV by benchmarks.run) and is deterministic."""
 from __future__ import annotations
 
+import functools
 import time
 
 import numpy as np
 
+from repro.api import Platform, SimBackend, nt, nt_chain
 from repro.core import (PAPER, SNIC, ChainProgram, EventSim, NTDag, NTSpec,
                         SNICConfig, make_rack, rack_analysis)
 from repro.core.consolidation import (analyze, fb_kv_load_trace,
@@ -213,23 +215,21 @@ def fig12_13_fb_consolidation(dur_ms: float = 40.0) -> dict:
 
 # ================================================= Fig 14: credits/tput =====
 def fig14_credits(dur_ms: float = 3.0) -> dict:
-    """Fig 14: throughput vs initial credits and packet size."""
+    """Fig 14: throughput vs initial credits and packet size (Platform API)."""
     out = {}
     specs = _specs(["NT1"], gbps=100.0, fixed=500.0)
     for credits in (1, 2, 4, 8):
         for size in (512, 1024, 1500):
-            sim = EventSim()
-            nic = SNIC(sim, SNICConfig(credits=credits, enable_drf=False,
-                                       enable_autoscale=False), specs)
-            nic.deploy([_chain_dag(1, "u", ("NT1",))])
-            sim.run(PAPER.PR_NS + 1)
-            t0 = sim.now
-            poisson_source(sim, rate_gbps=99.0, mean_bytes=size, tenant="u",
-                           dag_uid=1, sink=nic.inject, seed=1,
-                           until_ns=t0 + dur_ms * MS)
-            sim.run(t0 + dur_ms * MS)
+            plat = Platform(SimBackend(config=SNICConfig(
+                credits=credits, enable_drf=False, enable_autoscale=False)),
+                specs=specs)
+            dep = plat.tenant("u").deploy(nt("NT1"))
+            plat.backend.settle()
+            dep.source("poisson", rate_gbps=99.0, mean_bytes=size, seed=1,
+                       duration_ms=dur_ms)
+            plat.run(duration_ms=dur_ms)
             out[f"c{credits}_s{size}_gbps"] = round(
-                nic.stats["u"].gbps(dur_ms * MS), 1)
+                plat.report()["u"].gbps, 1)
     return out
 
 
@@ -240,26 +240,24 @@ def fig15_chaining(dur_ms: float = 2.0) -> dict:
     for n in range(2, 8):
         names = tuple(f"NT{i}" for i in range(1, n + 1))
         specs = _specs(names, gbps=100.0, fixed=500.0)
+        chain = nt_chain(*names)
         for scheme in ("snic", "half", "panic"):
-            sim = EventSim()
             mode = "panic" if scheme == "panic" else "snic"
-            nic = SNIC(sim, SNICConfig(mode=mode, region_slots=8,
-                                       enable_drf=False,
-                                       enable_autoscale=False), specs)
+            plat = Platform(SimBackend(config=SNICConfig(
+                mode=mode, region_slots=8, enable_drf=False,
+                enable_autoscale=False)), specs=specs)
             if scheme == "half":
                 h = n // 2
                 progs = [ChainProgram(names[:h]), ChainProgram(names[h:])]
             else:
                 progs = [ChainProgram(names)]
-            nic.deploy([_chain_dag(1, "u", names)], programs=progs)
-            sim.run(PAPER.PR_NS * (len(progs)) + 1)
-            t0 = sim.now
-            poisson_source(sim, rate_gbps=40.0, mean_bytes=1000, tenant="u",
-                           dag_uid=1, sink=nic.inject, seed=2,
-                           until_ns=t0 + dur_ms * MS)
-            sim.run(t0 + 2 * dur_ms * MS)
+            dep = plat.tenant("u").deploy(chain, programs=progs)
+            plat.backend.settle()
+            dep.source("poisson", rate_gbps=40.0, mean_bytes=1000, seed=2,
+                       duration_ms=dur_ms)
+            plat.run(duration_ms=2 * dur_ms)
             out[f"{scheme}_n{n}_us"] = round(
-                nic.stats["u"].mean_latency_us(), 2)
+                plat.report()["u"].mean_latency_us, 2)
     return out
 
 
@@ -271,24 +269,22 @@ def fig16_parallelism(dur_ms: float = 2.0) -> dict:
         names = tuple(f"NT{i}" for i in range(1, n + 1))
         specs = _specs(names, gbps=50.0, fixed=2000.0)
         cases = {
-            "serial": NTDag(1, "u", ((names,),)),
-            "half": NTDag(1, "u", ((names[:n // 2], names[n // 2:]),)),
-            "parallel": NTDag(1, "u", (tuple((x,) for x in names),)),
+            "serial": nt_chain(*names),
+            "half": nt_chain(*names[:n // 2]) | nt_chain(*names[n // 2:]),
+            "parallel": functools.reduce(lambda a, b: a | b,
+                                         map(nt, names)),
         }
-        for label, dag in cases.items():
-            sim = EventSim()
-            nic = SNIC(sim, SNICConfig(region_slots=8, n_regions=8,
-                                       enable_drf=False,
-                                       enable_autoscale=False), specs)
-            nic.deploy([dag])
-            sim.run(PAPER.PR_NS * 8 + 1)
-            t0 = sim.now
-            poisson_source(sim, rate_gbps=10.0, mean_bytes=1000, tenant="u",
-                           dag_uid=1, sink=nic.inject, seed=3,
-                           until_ns=t0 + dur_ms * MS)
-            sim.run(t0 + 2 * dur_ms * MS)
+        for label, expr in cases.items():
+            plat = Platform(SimBackend(config=SNICConfig(
+                region_slots=8, n_regions=8, enable_drf=False,
+                enable_autoscale=False)), specs=specs)
+            dep = plat.tenant("u").deploy(expr)
+            plat.backend.sim.run(PAPER.PR_NS * 8 + 1)
+            dep.source("poisson", rate_gbps=10.0, mean_bytes=1000, seed=3,
+                       duration_ms=dur_ms)
+            plat.run(duration_ms=2 * dur_ms)
             out[f"{label}_n{n}_us"] = round(
-                nic.stats["u"].mean_latency_us(), 2)
+                plat.report()["u"].mean_latency_us, 2)
     return out
 
 

@@ -2,8 +2,10 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig14 fig15
+  PYTHONPATH=src python -m benchmarks.run --list     # names only
 
 Prints ``benchmark,key,value`` CSV and writes JSON to experiments/bench/.
+Exit codes: 0 ok, 1 benchmark failure(s), 2 unknown benchmark name.
 """
 from __future__ import annotations
 
@@ -34,6 +36,15 @@ BENCHES = {
 
 def main(argv=None) -> int:
     args = argv if argv is not None else sys.argv[1:]
+    if "--list" in args or "-l" in args:
+        for k in BENCHES:
+            print(k)
+        return 0
+    unknown_flags = [a for a in args if a.startswith("-")
+                     and a not in ("--list", "-l")]
+    if unknown_flags:
+        print(f"unknown flag(s) {unknown_flags}; known: --list")
+        return 2
     names = [a for a in args if not a.startswith("-")] or list(BENCHES)
     OUT.mkdir(parents=True, exist_ok=True)
     failures = []

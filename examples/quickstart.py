@@ -1,13 +1,17 @@
 """Quickstart: train a tiny assigned-architecture model, checkpoint it, and
-serve a few requests through the SuperNIC-policy engine.
+serve requests through the unified offload API — the serving DAG
+``nt("cache") >> nt("prefill") >> nt("decode")`` deployed on ServeBackend
+(the SuperNIC-policy engine; dropping the cache NT disables the response
+cache).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro import configs
+from repro.api import Platform, ServeBackend, SERVE_SPECS, nt
 from repro.launch.train import Trainer, parse_mesh
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.engine import EngineConfig
 
 
 def main():
@@ -19,25 +23,35 @@ def main():
     print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
 
     # ------------------------------------------------------------- serve --
-    print("== serving through the sNIC engine (cache NT on) ==")
-    eng = Engine(cfg, EngineConfig(batch_sizes=(1, 2), max_len=96),
-                 params=tr.params)
-    eng.prelaunch()   # paper's pre-launch: compile before traffic
+    print("== serving through the Platform API (cache NT in the DAG) ==")
+    backend = ServeBackend(cfg, EngineConfig(batch_sizes=(1, 2), max_len=96),
+                           params=tr.params)
+    plat = Platform(backend, specs=SERVE_SPECS)
+    tenants = [plat.tenant(f"tenant{i}") for i in range(2)]
+    deps = [t.deploy(nt("cache") >> nt("prefill") >> nt("decode"))
+            for t in tenants]
+    backend.prelaunch()   # paper's pre-launch: compile before traffic
     rng = np.random.default_rng(0)
-    reqs = [eng.submit(f"tenant{i % 2}",
-                       rng.integers(2, cfg.vocab_size, 12).astype(np.int32),
-                       max_new=8) for i in range(6)]
-    eng.run_until_drained()
+    reqs = [deps[i % 2].inject(
+                rng.integers(2, cfg.vocab_size, 12).astype(np.int32),
+                max_new=8) for i in range(6)]
+    plat.run()
     # resubmit the first prompt: served by the caching NT this time
-    hit = eng.submit("tenant0", reqs[0].prompt, max_new=8)
-    eng.run_until_drained()
+    hit = deps[0].inject(reqs[0].prompt, max_new=8)
+    plat.run()
+    rep = plat.report()
     for r in reqs[:2] + [hit]:
         print(f"req {r.rid} tenant={r.tenant} cached={r.cached} "
               f"out={r.out}")
-    print(f"cache NT: {eng.cache_nt.hits} hits / "
-          f"{eng.cache_nt.misses} misses")
+    print(f"cache NT: {rep.extra['cache_hits']} hits / "
+          f"{rep.extra['cache_misses']} misses")
     print(f"compile log (PR analogue): "
-          f"{[(k, bs, round(t, 2)) for k, bs, t in eng.compile_log]}")
+          f"{[(k, bs, round(t, 2)) for k, bs, t in rep.extra['compile_log']]}")
+    for t in tenants:
+        tr_rep = rep.tenants.get(t.name)
+        if tr_rep:
+            print(f"{t.name}: {tr_rep.pkts_done} requests, "
+                  f"mean latency {tr_rep.mean_latency_us / 1e3:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""repro.api — the unified tenant-facing offload API (SuperNIC §3).
+
+Build a network-task DAG declaratively, deploy it through one Platform
+facade, and run it on any substrate:
+
+    from repro.api import Platform, SimBackend, nt
+
+    dag = nt("firewall") >> nt("nat") >> nt("chacha20")   # chain
+    par = nt("rx") >> (nt("fw") | nt("dedup")) >> nt("tx")  # fork/join
+
+Backends: SimBackend (event-driven sNIC device model), ComputeBackend
+(NT names bound to batched JAX/Pallas kernels, the DAG fused into one
+jitted program), ServeBackend (multi-tenant LLM serving engine).
+"""
+from .backend import Backend, PlatformReport, TenantReport  # noqa: F401
+from .compute_backend import (VPC_SPECS, ComputeBackend,  # noqa: F401
+                              ComputeNT)
+from .dag import (DagError, DagExpr, compile_dag, nt,  # noqa: F401
+                  nt_chain, validate_dag)
+from .platform import Deployment, Platform, Tenant  # noqa: F401
+from .sim_backend import SimBackend  # noqa: F401
+
+
+def __getattr__(name):
+    # ServeBackend pulls in the model stack; import it lazily
+    if name in ("ServeBackend", "SERVE_SPECS"):
+        from . import serve_backend
+        return getattr(serve_backend, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,86 @@
+"""The backend protocol every substrate implements, plus the typed results
+``Platform.report()`` returns.
+
+One DAG, three substrates:
+
+  - :class:`~repro.api.sim_backend.SimBackend` — the paper-constant
+    discrete-event sNIC (latency/Gbps/drop stats);
+  - :class:`~repro.api.compute_backend.ComputeBackend` — NT names bound to
+    real batched JAX/Pallas kernels, the whole DAG fused into one jitted
+    program;
+  - :class:`~repro.api.serve_backend.ServeBackend` — the multi-tenant LLM
+    serving engine (requests through cache/prefill/decode NTs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Protocol, runtime_checkable
+
+from repro.core.nt import NTDag, NTSpec
+
+
+@dataclass
+class TenantReport:
+    """Per-tenant results in common units; ``outputs`` carries the
+    backend-specific payloads (result arrays, finished requests, ...)."""
+    tenant: str
+    backend: str = ""
+    pkts_done: int = 0
+    bytes_done: float = 0.0
+    drops: int = 0
+    mean_latency_us: float = 0.0
+    p99_latency_us: float = 0.0
+    gbps: float = 0.0
+    outputs: list = field(default_factory=list)
+    extra: dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class PlatformReport:
+    backend: str
+    duration_ns: float = 0.0
+    tenants: dict[str, TenantReport] = field(default_factory=dict)
+    extra: dict[str, Any] = field(default_factory=dict)
+
+    def __getitem__(self, tenant: str) -> TenantReport:
+        return self.tenants[tenant]
+
+    @property
+    def total_gbps(self) -> float:
+        return sum(t.gbps for t in self.tenants.values())
+
+    @property
+    def total_pkts(self) -> int:
+        return sum(t.pkts_done for t in self.tenants.values())
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """What a substrate must provide to sit behind the Platform facade.
+
+    ``deploy`` receives an already-compiled and validated :class:`NTDag`
+    (the Platform runs the builder + spec validation); ``inject`` receives
+    whatever traffic unit the substrate consumes — packet sizes (sim),
+    packet-field arrays (compute), token prompts (serve).
+    """
+
+    name: str
+
+    def register(self, spec: NTSpec) -> None:
+        """Make an NT available (specs dict, kernel binding, ...)."""
+        ...
+
+    def add_tenant(self, tenant: str, weight: float) -> None:
+        ...
+
+    def deploy(self, dag: NTDag, **kw) -> None:
+        ...
+
+    def inject(self, tenant: str, dag_uid: int, *args, **kw):
+        ...
+
+    def run(self, **kw) -> None:
+        ...
+
+    def report(self) -> PlatformReport:
+        ...

@@ -1,0 +1,210 @@
+"""ComputeBackend: NT names bound to real batched JAX/Pallas kernels.
+
+The same builder DAG that drives the event simulator executes here as *one
+fused jitted program* — the generalization of the hardcoded
+:func:`repro.serving.vpc.vpc_chain`.  Each compute NT is a pure function
+over a *packet-batch state* (a dict of arrays: ``headers`` (N, 5) u32,
+``payload`` (N, 16) u32, ``allow`` (N,) bool, ...); chaining composes the
+functions inside one ``jax.jit``, so XLA fuses the whole DAG exactly like
+placing an NT chain in a single region (no scheduler round trips).
+
+Fork/join semantics mirror the sync buffer (§4.2): every branch of a stage
+reads the stage's input state; the join merges each branch's declared
+``writes``.  Two branches writing the same field is a build-time error — the
+data model gives parallel branches no ordering to resolve it.
+
+Egress applies the firewall verdict the way the fixed sNIC datapath does:
+denied packets keep their original header and leave with a zeroed payload
+(bit-exact with ``vpc_chain``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nt import GBPS, NTDag, NTSpec
+from repro.serving.vpc import chacha20_xor_jnp, firewall, nat_rewrite
+
+from .backend import PlatformReport, TenantReport
+from .dag import DagError
+
+
+@dataclass(frozen=True)
+class ComputeNT:
+    """One network task as real compute.
+
+    ``fn(state, params) -> updates``: reads any state fields, returns the
+    dict of fields it produces.  ``writes`` declares those fields so the
+    fork/join merge can detect conflicts at build time.
+    """
+    name: str
+    fn: Callable[[dict, dict], dict]
+    writes: tuple[str, ...]
+
+
+# ------------------------------------------------------- built-in NT library --
+def _fw_nt(state, params):
+    allow = firewall(state["headers"], params["rules"])
+    prev = state.get("allow")
+    return {"allow": allow if prev is None else prev & allow}
+
+
+def _nat_nt(state, params):
+    return {"headers": nat_rewrite(state["headers"],
+                                   params.get("nat_ip", 0x0A000001))}
+
+
+def _chacha_nt(state, params):
+    return {"payload": chacha20_xor_jnp(state["payload"], params["key"],
+                                        params["nonce"],
+                                        params.get("counter0", 1))}
+
+
+BUILTIN_COMPUTE_NTS: dict[str, ComputeNT] = {
+    "firewall": ComputeNT("firewall", _fw_nt, writes=("allow",)),
+    "nat": ComputeNT("nat", _nat_nt, writes=("headers",)),
+    "chacha20": ComputeNT("chacha20", _chacha_nt, writes=("payload",)),
+}
+
+# nominal service models for the same NT names on the sim substrate, so one
+# spec registry can front both backends
+VPC_SPECS: dict[str, NTSpec] = {
+    "firewall": NTSpec("firewall", max_gbps=100.0, fixed_ns=300.0),
+    "nat": NTSpec("nat", max_gbps=100.0, fixed_ns=300.0),
+    "chacha20": NTSpec("chacha20", max_gbps=80.0, fixed_ns=500.0),
+}
+
+
+@dataclass
+class _Deployment:
+    dag: NTDag
+    program: Callable            # jitted (state, params) -> state
+    params: dict
+    results: list
+
+
+class ComputeBackend:
+    name = "compute"
+
+    def __init__(self, nts: dict[str, ComputeNT] | None = None):
+        self.nts = dict(BUILTIN_COMPUTE_NTS)
+        self.nts.update(nts or {})
+        self.deployments: dict[int, _Deployment] = {}
+        self.tenants: dict[str, float] = {}
+        self._pending: list[tuple[int, dict]] = []
+        self._elapsed_s = 0.0
+
+    # ----------------------------------------------------------- protocol --
+    def register(self, spec: NTSpec) -> None:
+        if spec.name not in self.nts:
+            raise DagError(
+                f"NT {spec.name!r} has no compute binding; register a "
+                f"ComputeNT via register_nt() (have: {sorted(self.nts)})")
+
+    def register_nt(self, nt: ComputeNT) -> None:
+        self.nts[nt.name] = nt
+
+    def add_tenant(self, tenant: str, weight: float) -> None:
+        self.tenants[tenant] = weight
+
+    def _compile(self, dag: NTDag, params: dict) -> Callable:
+        """Lower the DAG to one fused function and jit it."""
+        for stage in dag.stages:
+            writer: dict[str, tuple[int, str]] = {}
+            for bi, branch in enumerate(stage):
+                for name in branch:
+                    if name not in self.nts:
+                        raise DagError(f"NT {name!r} has no compute binding")
+                    for fld in self.nts[name].writes:
+                        prev = writer.get(fld)
+                        if prev is not None and prev[0] != bi:
+                            raise DagError(
+                                f"parallel branches both write {fld!r} "
+                                f"({prev[1]} and {name}); the join has no "
+                                "ordering to merge them")
+                        writer[fld] = (bi, name)
+
+        def program(state: dict, params: dict) -> dict:
+            state = dict(state)
+            orig_headers = state.get("headers")
+            for stage in dag.stages:
+                if len(stage) == 1:
+                    for name in stage[0]:
+                        state.update(self.nts[name].fn(
+                            state, params.get(name, {})))
+                    continue
+                joined: dict = {}
+                for branch in stage:              # fork: same input state
+                    bstate = dict(state)
+                    for name in branch:
+                        up = self.nts[name].fn(bstate, params.get(name, {}))
+                        bstate.update(up)
+                        joined.update(up)
+                state.update(joined)              # join: merge branch writes
+            allow = state.get("allow")
+            if allow is not None:                 # egress verdict
+                if orig_headers is not None and "headers" in state:
+                    state["headers"] = jnp.where(
+                        allow[:, None], state["headers"], orig_headers)
+                if "payload" in state:
+                    state["payload"] = jnp.where(
+                        allow[:, None], state["payload"],
+                        jnp.zeros_like(state["payload"]))
+            return state
+
+        return jax.jit(program)
+
+    def deploy(self, dag: NTDag, params: dict | None = None, **_kw) -> None:
+        params = params or {}
+        self.deployments[dag.uid] = _Deployment(
+            dag, self._compile(dag, params), params, results=[])
+
+    def inject(self, tenant: str, dag_uid: int, state: dict | None = None,
+               **fields) -> None:
+        """Queue one packet batch.  ``state`` (or keyword fields) holds the
+        batch arrays, e.g. ``headers=(N, 5) u32, payload=(N, 16) u32``."""
+        if dag_uid not in self.deployments:
+            raise KeyError(f"DAG {dag_uid} not deployed")
+        batch = dict(state or {})
+        batch.update(fields)
+        self._pending.append((dag_uid, batch))
+
+    def run(self, **_kw) -> None:
+        """Execute every pending batch through its fused program."""
+        t0 = time.time()
+        for dag_uid, batch in self._pending:
+            dep = self.deployments[dag_uid]
+            out = dep.program(batch, dep.params)
+            out = {k: v.block_until_ready() if hasattr(v, "block_until_ready")
+                   else v for k, v in out.items()}
+            dep.results.append(out)
+        self._pending.clear()
+        self._elapsed_s += time.time() - t0
+
+    def report(self) -> PlatformReport:
+        rep = PlatformReport(backend=self.name,
+                             duration_ns=self._elapsed_s * 1e9)
+        for dep in self.deployments.values():
+            tenant = dep.dag.tenant
+            tr = rep.tenants.setdefault(
+                tenant, TenantReport(tenant=tenant, backend=self.name))
+            for out in dep.results:
+                n = next((int(v.shape[0]) for v in out.values()
+                          if hasattr(v, "shape") and v.ndim >= 1), 0)
+                nbytes = sum(
+                    v.size * v.dtype.itemsize for v in out.values()
+                    if hasattr(v, "dtype"))
+                tr.pkts_done += n
+                tr.bytes_done += nbytes
+                tr.outputs.append(out)
+            if self._elapsed_s > 0:
+                tr.gbps = tr.bytes_done * 8 / self._elapsed_s / 1e9
+        return rep
+
+
+__all__ = ["BUILTIN_COMPUTE_NTS", "ComputeBackend", "ComputeNT", "VPC_SPECS",
+           "GBPS"]

@@ -1,0 +1,128 @@
+"""The Platform facade: one tenant-facing offload API over every substrate.
+
+This is the repo's analogue of SuperNIC's user interface (§3): a tenant
+registers NTs, declares a network-task DAG with the builder, deploys it,
+injects traffic, and reads typed per-tenant results — without caring whether
+the DAG lands on the event-driven device model, a fused JAX program, or the
+LLM serving engine::
+
+    from repro.api import Platform, SimBackend, nt
+    from repro.api.compute_backend import VPC_SPECS
+
+    plat = Platform(SimBackend(), specs=VPC_SPECS)
+    ten = plat.tenant("alice", weight=2.0)
+    dep = ten.deploy(nt("firewall") >> nt("nat") >> nt("chacha20"))
+    ten.inject(1500)                      # one 1500 B packet
+    plat.run(duration_ms=2.0, settle=True)
+    print(plat.report()["alice"].mean_latency_us)
+
+Swap ``SimBackend()`` for ``ComputeBackend()`` or ``ServeBackend(...)`` and
+the same DAG executes as real compute or serves LLM requests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.nt import NTDag, NTSpec
+
+from .backend import Backend, PlatformReport, TenantReport
+from .dag import DagError, DagExpr, compile_dag
+
+
+@dataclass
+class Deployment:
+    """Handle for one deployed DAG (uid + compiled stages)."""
+    dag: NTDag
+    tenant: "Tenant"
+
+    @property
+    def uid(self) -> int:
+        return self.dag.uid
+
+    def inject(self, *args, **kw):
+        return self.tenant.platform.backend.inject(
+            self.tenant.name, self.dag.uid, *args, **kw)
+
+    def source(self, kind: str = "poisson", **kw) -> None:
+        """Attach a stochastic traffic source (sim backend only)."""
+        backend = self.tenant.platform.backend
+        if not hasattr(backend, "add_source"):
+            raise NotImplementedError(
+                f"{backend.name} backend has no traffic sources")
+        backend.add_source(kind, self.tenant.name, self.dag.uid, **kw)
+
+
+@dataclass
+class Tenant:
+    """A tenant handle: deploys DAGs and injects traffic under its name."""
+    platform: "Platform"
+    name: str
+    weight: float = 1.0
+    deployments: list[Deployment] = field(default_factory=list)
+
+    def deploy(self, dag: DagExpr | NTDag | str, **kw) -> Deployment:
+        """Compile + validate a builder expression and hand it to the
+        backend.  Backend-specific keywords pass through (``params=`` for
+        compute, ``prelaunch=`` for sim)."""
+        ntdag = compile_dag(
+            dag, uid=self.platform._next_uid(), tenant=self.name,
+            specs=self.platform.specs or None,
+            region_slots=getattr(self.platform.backend, "region_slots", None))
+        self.platform.backend.deploy(ntdag, **kw)
+        dep = Deployment(ntdag, self)
+        self.deployments.append(dep)
+        return dep
+
+    def inject(self, *args, dag: Deployment | None = None, **kw):
+        """Inject traffic into this tenant's (sole, or given) deployment."""
+        if dag is None:
+            if len(self.deployments) != 1:
+                raise DagError(
+                    f"tenant {self.name!r} has {len(self.deployments)} "
+                    "deployments; pass dag=<deployment>")
+            dag = self.deployments[0]
+        return dag.inject(*args, **kw)
+
+    def report(self) -> TenantReport:
+        rep = self.platform.report()
+        return rep.tenants.get(
+            self.name, TenantReport(tenant=self.name,
+                                    backend=self.platform.backend.name))
+
+
+class Platform:
+    """Facade over one backend; owns the NT-spec registry and tenant set."""
+
+    def __init__(self, backend: Backend,
+                 specs: dict[str, NTSpec] | list[NTSpec] | None = None):
+        self.backend = backend
+        self.specs: dict[str, NTSpec] = {}
+        self.tenants: dict[str, Tenant] = {}
+        self._uid = 0
+        if specs:
+            vals = specs.values() if isinstance(specs, dict) else specs
+            self.register(*vals)
+
+    def _next_uid(self) -> int:
+        self._uid += 1
+        return self._uid
+
+    def register(self, *specs: NTSpec) -> "Platform":
+        """Register NT specs: build-time validation vocabulary + whatever
+        the backend needs (sim service models, kernel-binding checks)."""
+        for spec in specs:
+            self.specs[spec.name] = spec
+            self.backend.register(spec)
+        return self
+
+    def tenant(self, name: str, weight: float = 1.0) -> Tenant:
+        if name not in self.tenants:
+            self.tenants[name] = Tenant(self, name, weight)
+            self.backend.add_tenant(name, weight)
+        return self.tenants[name]
+
+    def run(self, **kw) -> None:
+        self.backend.run(**kw)
+
+    def report(self) -> PlatformReport:
+        return self.backend.report()

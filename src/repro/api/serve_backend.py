@@ -1,0 +1,97 @@
+"""ServeBackend: the Platform face of the multi-tenant LLM serving engine.
+
+The serving substrate executes one canonical request chain —
+``cache >> prefill >> decode`` (the paper's caching NT in front of the
+model, §6.1) — so deployment here means *configuring* that chain: a DAG
+without the ``cache`` NT turns the response cache off for the engine.
+``inject`` submits token prompts; the report carries finished requests with
+per-tenant latency and cache-hit statistics.
+"""
+from __future__ import annotations
+
+from repro.core.nt import NTDag, NTSpec
+
+from .backend import PlatformReport, TenantReport
+from .dag import DagError
+
+# nominal service models so the same names validate on the sim substrate
+SERVE_SPECS: dict[str, NTSpec] = {
+    "cache": NTSpec("cache", max_gbps=100.0, fixed_ns=200.0),
+    "prefill": NTSpec("prefill", max_gbps=20.0, fixed_ns=5000.0),
+    "decode": NTSpec("decode", max_gbps=10.0, fixed_ns=2000.0),
+}
+
+
+class ServeBackend:
+    name = "serve"
+
+    def __init__(self, model_cfg, engine_cfg=None, params=None, seed: int = 0):
+        # deferred import: keep `import repro.api` light for sim-only users
+        from repro.serving.engine import Engine, EngineConfig
+        self.ecfg = engine_cfg or EngineConfig()
+        self.engine = Engine(model_cfg, self.ecfg, params=params, seed=seed)
+        self.dags: dict[int, NTDag] = {}
+        self._prelaunched = False
+
+    # ----------------------------------------------------------- protocol --
+    def register(self, spec: NTSpec) -> None:
+        if spec.name not in SERVE_SPECS:
+            raise DagError(
+                f"NT {spec.name!r} has no serving implementation; "
+                f"available: {sorted(SERVE_SPECS)}")
+
+    def add_tenant(self, tenant: str, weight: float) -> None:
+        self.engine.weights[tenant] = weight
+        self.engine.admission.weights[tenant] = weight
+
+    def deploy(self, dag: NTDag, **_kw) -> None:
+        names = dag.all_nts()
+        unknown = sorted(set(names) - set(SERVE_SPECS))
+        if unknown:
+            raise DagError(f"NT(s) {unknown} not servable; "
+                           f"available: {sorted(SERVE_SPECS)}")
+        if "prefill" not in names or "decode" not in names:
+            raise DagError("a serving DAG needs the prefill and decode NTs")
+        wants_cache = "cache" in names
+        if self.dags and wants_cache != self.engine.ecfg.enable_cache_nt:
+            state = ("enabled" if self.engine.ecfg.enable_cache_nt
+                     else "disabled")
+            raise DagError(
+                "the response-cache NT is engine-wide and earlier "
+                f"deployments {state} it; use a separate ServeBackend for a "
+                "different cache setting")
+        self.engine.ecfg.enable_cache_nt = wants_cache
+        self.dags[dag.uid] = dag
+
+    def prelaunch(self) -> None:
+        """Paper §4.4 pre-launch: compile the expected shapes ahead of
+        traffic (the engine's PR analogue)."""
+        self.engine.prelaunch()
+        self._prelaunched = True
+
+    def inject(self, tenant: str, dag_uid: int, prompt, max_new: int = 16):
+        if dag_uid not in self.dags:
+            raise KeyError(f"DAG {dag_uid} not deployed")
+        return self.engine.submit(tenant, prompt, max_new=max_new)
+
+    def run(self, max_iters: int = 1000, **_kw) -> None:
+        self.engine.run_until_drained(max_iters=max_iters)
+
+    def report(self) -> PlatformReport:
+        rep = PlatformReport(backend=self.name)
+        for req in self.engine.done:
+            tr = rep.tenants.setdefault(
+                req.tenant, TenantReport(tenant=req.tenant, backend=self.name))
+            tr.pkts_done += 1
+            tr.outputs.append(req)
+            tr.extra["cached"] = tr.extra.get("cached", 0) + int(req.cached)
+        for tr in rep.tenants.values():
+            lats = [r.latency * 1e6 for r in tr.outputs]  # seconds -> us
+            if lats:
+                tr.mean_latency_us = sum(lats) / len(lats)
+                tr.p99_latency_us = sorted(lats)[
+                    min(len(lats) - 1, int(0.99 * len(lats)))]
+        rep.extra["cache_hits"] = self.engine.cache_nt.hits
+        rep.extra["cache_misses"] = self.engine.cache_nt.misses
+        rep.extra["compile_log"] = list(self.engine.compile_log)
+        return rep

@@ -1,0 +1,140 @@
+"""SimBackend: the Platform face of the paper-constant sNIC device model.
+
+Wraps :class:`EventSim` + :class:`SNIC` (and optionally a multi-sNIC
+:class:`Rack`) behind the backend protocol.  Traffic comes from explicit
+``inject`` calls or from the attached stochastic sources
+(:func:`poisson_source` & friends); ``run`` advances virtual time and the
+report carries the per-tenant latency/Gbps/drop statistics the paper's
+figures are built from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.distributed import Rack
+from repro.core.nt import NTDag, NTSpec
+from repro.core.sim import (EventSim, FlowStats, fb_kv_source, onoff_source,
+                            poisson_source)
+from repro.core.snic import SNIC, SNICConfig
+from repro.core.sim import MS, US  # noqa: F401  (re-export convenience)
+
+from .backend import PlatformReport, TenantReport
+
+_SOURCES = {"poisson": poisson_source, "fb_kv": fb_kv_source,
+            "onoff": onoff_source}
+
+
+class SimBackend:
+    name = "sim"
+
+    def __init__(self, config: SNICConfig | None = None, n_snics: int = 1,
+                 specs: dict[str, NTSpec] | None = None):
+        self.sim = EventSim()
+        self.specs: dict[str, NTSpec] = dict(specs or {})
+        cfg = config or SNICConfig()
+        if n_snics > 1:
+            cfgs = [dataclasses.replace(
+                        cfg, name=f"snic{i}",
+                        tenant_weights=dict(cfg.tenant_weights))
+                    for i in range(n_snics)]
+            self.snics = [SNIC(self.sim, c, self.specs) for c in cfgs]
+            self.rack: Rack | None = Rack(self.sim, self.snics)
+            for s in self.snics:
+                s.vmem.remote_free = (
+                    lambda src=s: self.rack.remote_free_memory(src))
+        else:
+            self.snics = [SNIC(self.sim, cfg, self.specs)]
+            self.rack = None
+        self.snic = self.snics[0]
+        self._t0: float | None = None
+        self._elapsed_ns = 0.0
+
+    # ----------------------------------------------------------- protocol --
+    @property
+    def region_slots(self) -> int:
+        return self.snic.cfg.region_slots
+
+    def register(self, spec: NTSpec) -> None:
+        self.specs[spec.name] = spec
+
+    def add_tenant(self, tenant: str, weight: float) -> None:
+        for s in self.snics:
+            s.cfg.tenant_weights[tenant] = weight
+            s.admission.weights[tenant] = weight
+            s.stats.setdefault(tenant, FlowStats())
+
+    def deploy(self, dag: NTDag, prelaunch: bool = True, snic: int = 0,
+               programs=None, **_kw) -> None:
+        """``programs`` overrides bitstream enumeration (§4.3) — e.g. to
+        force a split-chain placement for benchmarking."""
+        self.snics[snic].deploy([dag], programs=programs,
+                                prelaunch=prelaunch)
+
+    def inject(self, tenant: str, dag_uid: int, size_bytes: int,
+               snic: int = 0) -> None:
+        self.snics[snic].inject(tenant, dag_uid, size_bytes)
+
+    def add_source(self, kind: str, tenant: str, dag_uid: int,
+                   duration_ms: float | None = None, snic: int = 0,
+                   **kw) -> None:
+        """Attach a stochastic traffic source starting at current sim time."""
+        try:
+            src = _SOURCES[kind]
+        except KeyError:
+            raise ValueError(
+                f"unknown source {kind!r}; known: {sorted(_SOURCES)}")
+        until = (self.sim.now + duration_ms * MS if duration_ms is not None
+                 else math.inf)
+        src(self.sim, tenant=tenant, dag_uid=dag_uid,
+            sink=self.snics[snic].inject, until_ns=until, **kw)
+
+    def settle(self) -> None:
+        """Let in-flight partial reconfigurations finish (pre-launch PR) so a
+        measurement window starts with the deployed chains live.  Resets the
+        Gbps measurement window: it restarts at the next ``run``."""
+        self.sim.run(self.sim.now + self.snic.cfg.pr_ns + 1)
+        self._t0 = None
+        self._elapsed_ns = 0.0
+
+    def run(self, duration_ms: float | None = None,
+            duration_ns: float | None = None, settle: bool = False,
+            **_kw) -> None:
+        """Advance virtual time.  The measurement window (for Gbps) spans
+        every ``run`` call since backend creation or the last ``settle``
+        (``settle`` resets the window so PR wait time is not counted)."""
+        if settle:
+            self.settle()
+        if duration_ns is None:
+            duration_ns = (duration_ms if duration_ms is not None else 1.0) \
+                * MS
+        if self._t0 is None:
+            self._t0 = self.sim.now
+        self.sim.run(self.sim.now + duration_ns)
+        self._elapsed_ns = self.sim.now - self._t0
+
+    def report(self) -> PlatformReport:
+        dur = max(self._elapsed_ns, 1.0)
+        rep = PlatformReport(backend=self.name, duration_ns=dur)
+        merged: dict[str, FlowStats] = {}
+        seen: set[int] = set()
+        for s in self.snics:
+            for tenant, st in s.stats.items():
+                if id(st) in seen:      # rack: peers may share a FlowStats
+                    continue
+                seen.add(id(st))
+                dst = merged.setdefault(tenant, FlowStats())
+                dst.latencies_ns.extend(st.latencies_ns)
+                dst.bytes_done += st.bytes_done
+                dst.pkts_done += st.pkts_done
+                dst.drops += st.drops
+        for tenant, st in merged.items():
+            rep.tenants[tenant] = TenantReport(
+                tenant=tenant, backend=self.name,
+                pkts_done=st.pkts_done, bytes_done=st.bytes_done,
+                drops=st.drops,
+                mean_latency_us=st.mean_latency_us(),
+                p99_latency_us=st.p99_us(),
+                gbps=st.gbps(dur))
+        rep.extra["pr_count"] = sum(s.regions.pr_count for s in self.snics)
+        return rep

@@ -2,6 +2,7 @@
 
   - nt:            NT/DAG/packet data model, bitstream enumeration
   - drf:           run-time-monitored weighted Dominant Resource Fairness
+  - policy:        reusable control loops (DRF admission, autoscalers)
   - regions:       region manager (victim cache, PR-cost-aware launching)
   - vmem:          paged virtual memory w/ over-subscription + remote swap
   - snic:          the sNIC device (scheduler, credits, fork/join, control)
@@ -13,6 +14,7 @@ from .consolidation import analyze, rack_analysis  # noqa: F401
 from .distributed import Rack, make_rack  # noqa: F401
 from .drf import drf_allocate  # noqa: F401
 from .nt import ChainProgram, NTDag, NTSpec, Packet, enumerate_programs  # noqa: F401
+from .policy import DRFAdmission, StepScaler, UtilizationScaler  # noqa: F401
 from .regions import RegionManager, RegionState  # noqa: F401
 from .sim import PAPER, EventSim, FlowStats  # noqa: F401
 from .snic import SNIC, SNICConfig  # noqa: F401

@@ -20,8 +20,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
-from .drf import drf_allocate
 from .nt import ChainProgram, NTDag, NTInstance, NTSpec, Packet, enumerate_programs
+from .policy import DRFAdmission, UtilizationScaler
 from .regions import LaunchResult, Region, RegionManager, RegionState
 from .sim import GBPS, PAPER, EventSim, FlowStats
 from .vmem import VirtualMemory
@@ -91,8 +91,8 @@ class SNIC:
         self.backlog: dict[str, list] = {}
         self.backlog_bytes: dict[str, float] = {}
         self.max_backlog_bytes = 4 << 20
-        # monitored demand per (tenant, resource) for DRF
-        self.demand: dict[str, dict[str, float]] = {}
+        # monitored demand per (tenant, resource) for DRF (policy component)
+        self.admission = DRFAdmission(cfg.tenant_weights)
         # uplink/egress server
         self.uplink_busy_until = 0.0
         self.egress_bytes = 0.0
@@ -100,9 +100,9 @@ class SNIC:
         # per-NT waiters: instance -> list of (packet, region, slot, stage)
         self.waiters: dict[int, list] = {}
         self.forks: dict[int, _Fork] = {}
-        # autoscale bookkeeping: nt name -> overload-start time (or None)
-        self.overload_since: dict[str, float | None] = {}
-        self.underload_since: dict[str, float | None] = {}
+        # autoscale policy: watermark + MONITOR_PERIOD hysteresis (§4.4)
+        self.scaler = UtilizationScaler(cfg.autoscale_hi, cfg.autoscale_lo,
+                                        dwell_ns=cfg.monitor_ns)
         # throughput timeline samples [(t, tenant, nt, bytes)]
         self.tput_log: list = []
         self.log_tput = False
@@ -175,8 +175,7 @@ class SNIC:
                      arrival_ns=self.sim.now)
         # offered-load monitoring happens BEFORE the rate limiter: "even if
         # there is no credit, we still capture the intended load" (§4.4)
-        d = self.demand.setdefault(tenant, {})
-        d["ingress"] = d.get("ingress", 0.0) + size_bytes
+        self.admission.observe(tenant, "ingress", size_bytes)
         st = self.stats.setdefault(tenant, FlowStats())
         q = self.backlog.setdefault(tenant, [])
         qb = self.backlog_bytes.get(tenant, 0.0)
@@ -227,7 +226,6 @@ class SNIC:
     def _parse(self, pkt: Packet) -> None:
         """Parser + MAT routing (§4.1) after the ingress PHY/MAC."""
         pkt.ingress_ns = self.sim.now
-        d = self.demand.setdefault(pkt.tenant, {})
         if pkt.dag_uid in self.remote_dags:          # MAT: forward to peer
             peer = self.remote_dags[pkt.dag_uid]
             pkt.hops += 1
@@ -240,7 +238,7 @@ class SNIC:
                            self._egress, pkt)
             return
         self.store_bytes += pkt.size_bytes            # payload -> packet store
-        d["store"] = d.get("store", 0.0) + pkt.size_bytes
+        self.admission.observe(pkt.tenant, "store", pkt.size_bytes)
         self.sim.after(self.cfg.phy_ns + self.cfg.core_ns,
                        self._start_stage, pkt, 0)
 
@@ -279,8 +277,7 @@ class SNIC:
         for name in branch:
             inst = self._inst_in(region, name)
             inst.demand_bytes += pkt.size_bytes
-            d = self.demand.setdefault(pkt.tenant, {})
-            d[f"nt:{name}"] = d.get(f"nt:{name}", 0.0) + pkt.size_bytes
+            self.admission.observe(pkt.tenant, f"nt:{name}", pkt.size_bytes)
         region.prelaunched = False
         region.last_used_ns = self.sim.now
         if self.cfg.mode == "panic":
@@ -468,8 +465,7 @@ class SNIC:
         rate = self.cfg.uplink_gbps * GBPS
         start = max(self.sim.now, self.uplink_busy_until)
         self.uplink_busy_until = start + pkt.size_bytes / rate
-        d = self.demand.setdefault(pkt.tenant, {})
-        d["egress"] = d.get("egress", 0.0) + pkt.size_bytes
+        self.admission.observe(pkt.tenant, "egress", pkt.size_bytes)
         self.sim.at(self.uplink_busy_until + self.cfg.phy_ns,
                     self._done, pkt)
 
@@ -491,20 +487,17 @@ class SNIC:
         for name, insts in self.regions.by_name.items():
             caps[f"nt:{name}"] = sum(
                 i.spec.max_gbps for i in insts) * GBPS * self.cfg.epoch_ns
-        demands = {t: dict(d) for t, d in self.demand.items() if d}
-        for t, qb in self.backlog_bytes.items():
-            if qb > 0:
-                demands.setdefault(t, {})
-                demands[t]["ingress"] = demands[t].get("ingress", 0.0) + qb
-        if demands:
-            res = drf_allocate(demands, caps, self.cfg.tenant_weights)
+        # standing backlog counts as ingress demand on top of the monitors
+        backlog = {t: {"ingress": qb}
+                   for t, qb in self.backlog_bytes.items() if qb > 0}
+        res = self.admission.allocate(caps, extra=backlog)
+        if res is not None:
             apply_at = self.sim.now + self.cfg.drf_ns       # 3 us solver
-            for t in demands:
+            for t in res.alloc:
                 grant = res.alloc[t].get("ingress", 0.0)
                 rate = max(grant * self.cfg.ingress_headroom / self.cfg.epoch_ns,
                            self.cfg.ingress_floor_gbps * GBPS)
                 self.sim.at(apply_at, self._set_rate, t, rate)
-        self.demand = {}
         for insts in self.regions.by_name.values():
             for i in insts:
                 i.demand_bytes = 0.0
@@ -526,25 +519,13 @@ class SNIC:
             if not live:
                 continue
             cap = sum(i.spec.max_gbps for i in live) * GBPS * window
-            served = sum(i.served_bytes for i in live)
-            demand = served  # served bytes within the window
-            util = demand / max(cap, 1e-9)
-            if util >= self.cfg.autoscale_hi:
-                if self.overload_since.get(name) is None:
-                    self.overload_since[name] = self.sim.now
-                elif self.sim.now - self.overload_since[name] >= window:
-                    self._scale_out(name)
-                    self.overload_since[name] = None
-            else:
-                self.overload_since[name] = None
-            if util <= self.cfg.autoscale_lo and len(live) > 1:
-                if self.underload_since.get(name) is None:
-                    self.underload_since[name] = self.sim.now
-                elif self.sim.now - self.underload_since[name] >= window:
-                    self._scale_down(name)
-                    self.underload_since[name] = None
-            else:
-                self.underload_since[name] = None
+            served = sum(i.served_bytes for i in live)  # within the window
+            decision = self.scaler.decide(name, served, cap, self.sim.now,
+                                          n_instances=len(live))
+            if decision.direction > 0:
+                self._scale_out(name)
+            elif decision.direction < 0:
+                self._scale_down(name)
             for i in insts:
                 i.served_bytes = 0.0
                 i.served_pkts = 0

@@ -1,0 +1,14 @@
+"""Shims over jax.experimental.pallas API drift so the kernels run across
+the jax versions we support."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # pragma: no cover - depends on installed jax
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; the Pallas kernels need a jax version that "
+        "provides one of them (>= 0.4.32)")

@@ -28,8 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.drf import drf_allocate
-from repro.core.vmem import VirtualMemory
+from repro.core.policy import DRFAdmission, StepScaler
+from repro.core.vmem import OutOfMemory, VirtualMemory
 from repro.models import model as MD
 
 
@@ -106,7 +106,10 @@ class Engine:
         self.queues: dict[str, deque] = {}
         self.weights = tenant_weights or {}
         self.admitted: dict[str, int] = {}
-        self.demand: dict[str, int] = {}
+        self.admission = DRFAdmission(self.weights)
+        self.scaler = StepScaler(ecfg.batch_sizes,
+                                 scale_up_ratio=ecfg.scale_up_backlog,
+                                 scale_down_ratio=ecfg.scale_down_idle)
         self.budget: dict[str, float] = {}
         self.done: list[Request] = []
         self.cache_nt = ResponseCacheNT(ecfg.cache_entries)
@@ -150,28 +153,32 @@ class Engine:
         req = Request(self.rid, tenant, np.asarray(prompt, np.int32),
                       max_new, t_submit=time.time())
         self.queues.setdefault(tenant, deque()).append(req)
-        self.demand[tenant] = self.demand.get(tenant, 0) + len(prompt) + max_new
         return req
 
     # ---------------------------------------------------------------- DRF --
     def _run_drf(self):
-        """Monitored-demand DRF over (token-compute, kv-pages) per tenant."""
-        demands = {}
+        """Monitored-demand DRF over (token-compute, kv-pages) per tenant.
+
+        The standing queue is the demand signal (like the sNIC's backlog
+        bytes): every queued request contributes its token and KV-page cost."""
+        backlog = {}
         for t, q in self.queues.items():
             if not q:
                 continue
             toks = sum(len(r.prompt) + r.max_new for r in q)
             pages = sum((len(r.prompt) + r.max_new + self.ecfg.page_tokens - 1)
                         // self.ecfg.page_tokens for r in q)
-            demands[t] = {"tokens": float(toks), "pages": float(pages)}
-        if not demands:
-            return
+            backlog[t] = {"tokens": float(toks), "pages": float(pages)}
         caps = {"tokens": float(self.ecfg.epoch_requests * self.ecfg.max_len),
                 "pages": float(self.ecfg.mem_pages)}
-        res = drf_allocate(demands, caps, self.weights)
-        for t in demands:
+        # a queued request keeps demanding until admitted, so the standing
+        # backlog is the demand vector (the sNIC merges its arrival monitor
+        # the same way; here every queued request is still an arrival)
+        res = self.admission.allocate(caps, extra=backlog)
+        if res is None:
+            return
+        for t in backlog:
             self.budget[t] = res.alloc[t].get("tokens", 0.0)
-        self.demand = {}
 
     def _admit(self) -> list[Request]:
         """Ingress throttling: take requests round-robin within budget.
@@ -203,12 +210,7 @@ class Engine:
     # ------------------------------------------------------------- engine --
     def _autoscale(self, backlog: int):
         """Instance autoscaling: pick the decode batch shape by load."""
-        cap = self.active_bs
-        sizes = sorted(self.ecfg.batch_sizes)
-        if backlog > cap * self.ecfg.scale_up_backlog and cap < sizes[-1]:
-            self.active_bs = sizes[min(sizes.index(cap) + 1, len(sizes) - 1)]
-        elif backlog < cap * self.ecfg.scale_down_idle and cap > sizes[0]:
-            self.active_bs = sizes[max(sizes.index(cap) - 1, 0)]
+        self.active_bs = self.scaler.decide(self.active_bs, backlog)
 
     def _alloc_pages(self, req: Request) -> bool:
         n = (len(req.prompt) + req.max_new + self.ecfg.page_tokens - 1) \
@@ -218,7 +220,10 @@ class Engine:
             for i in range(n):
                 self.vmem.access(f"req{req.rid}", i, time.time())
             return True
-        except Exception:
+        except OutOfMemory:
+            # no KV memory for this request right now: roll back and let the
+            # caller requeue it; anything else (e.g. PermissionError) is a
+            # programming bug and must propagate
             self.vmem.release(f"req{req.rid}")
             return False
 

@@ -1,0 +1,276 @@
+"""Unified offload API: DAG builder round-trips, build-time validation,
+ChainProgram/enumerate_programs edge cases, shared policy components, and
+the cross-substrate acceptance run (same builder DAG on the simulator and
+as one fused JAX program, bit-exact vs the hardcoded vpc_chain)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import ChainProgram, NTDag, NTSpec, enumerate_programs
+from repro.core.policy import DRFAdmission, StepScaler, UtilizationScaler
+from repro.api import (ComputeBackend, DagError, Platform, SimBackend,
+                       VPC_SPECS, compile_dag, nt)
+
+SPECS = {f"NT{i}": NTSpec(f"NT{i}") for i in range(1, 6)}
+
+
+# ============================================================= DAG builder ====
+class TestBuilder:
+    def test_chain_round_trip(self):
+        """The builder compiles to the exact stage tuples the scheduler
+        expects — same shape NTDag.chain produces."""
+        dag = compile_dag(nt("NT1") >> nt("NT2") >> nt("NT3"),
+                          uid=7, tenant="a", specs=SPECS)
+        assert dag == NTDag(7, "a", ((("NT1", "NT2", "NT3"),),))
+        assert dag.stages == NTDag.chain(7, "a", ("NT1", "NT2", "NT3")).stages
+
+    def test_fork_join_round_trip(self):
+        expr = nt("NT1") >> (nt("NT2") >> nt("NT3") | nt("NT4")) >> nt("NT5")
+        dag = compile_dag(expr, uid=1, tenant="a", specs=SPECS)
+        assert dag.stages == ((("NT1",),),
+                              (("NT2", "NT3"), ("NT4",)),
+                              (("NT5",),))
+
+    def test_parallel_only_stage(self):
+        expr = nt("NT1") | nt("NT2") | nt("NT3")
+        assert expr.stages == ((("NT1",), ("NT2",), ("NT3",)),)
+
+    def test_string_coercion_both_sides(self):
+        assert (nt("NT1") >> "NT2").stages == ("NT1" >> nt("NT2")).stages \
+            == ((("NT1", "NT2"),),)
+        assert ("NT1" | nt("NT2")).stages == ((("NT1",), ("NT2",)),)
+
+    def test_chain_after_join_starts_new_stage(self):
+        expr = (nt("NT1") | nt("NT2")) >> nt("NT3") >> nt("NT4")
+        # NT3 >> NT4 fuse into one branch after the join
+        assert expr.stages == ((("NT1",), ("NT2",)), (("NT3", "NT4"),))
+
+    def test_expr_is_immutable_and_hashable(self):
+        e = nt("NT1") >> nt("NT2")
+        with pytest.raises(AttributeError):
+            e.stages = ()
+        assert e == nt("NT1") >> nt("NT2") and hash(e) == hash(
+            nt("NT1") >> nt("NT2"))
+
+    def test_unknown_nt_rejected_at_build_time(self):
+        with pytest.raises(DagError, match="unknown NT"):
+            compile_dag(nt("NT1") >> nt("nope"), 1, "a", specs=SPECS)
+
+    def test_area_overflow_rejected(self):
+        specs = {"big": NTSpec("big", area=8), "NT1": NTSpec("NT1")}
+        with pytest.raises(DagError, match="area"):
+            compile_dag(nt("NT1") >> nt("big"), 1, "a", specs=specs,
+                        region_slots=4)
+
+    def test_duplicate_nt_in_branch_rejected(self):
+        with pytest.raises(DagError, match="repeats"):
+            compile_dag(nt("NT1") >> nt("NT2") >> nt("NT1"), 1, "a",
+                        specs=SPECS)
+
+    def test_nested_fork_join_rejected(self):
+        with pytest.raises(DagError, match="linear NT chains"):
+            (nt("NT1") >> (nt("NT2") | nt("NT3"))) | nt("NT4")
+
+    def test_nt_chain_helper(self):
+        from repro.api import nt_chain
+        assert nt_chain("NT1", "NT2", "NT3") == \
+            nt("NT1") >> nt("NT2") >> nt("NT3")
+        with pytest.raises(DagError, match="at least one"):
+            nt_chain()
+
+    def test_ntdag_passthrough(self):
+        src = NTDag.chain(99, "old", ("NT1", "NT2"))
+        dag = compile_dag(src, uid=5, tenant="new")
+        assert dag.uid == 5 and dag.tenant == "new"
+        assert dag.stages == src.stages
+
+
+# ================================================== ChainProgram/enumerate ====
+class TestChainPrograms:
+    def test_covers_subsequence_skip(self):
+        prog = ChainProgram(("NT1", "NT2", "NT3", "NT4"))
+        assert prog.covers(("NT1", "NT3"))          # skips NT2
+        assert prog.covers(("NT2", "NT4"))
+        assert prog.covers(("NT1", "NT2", "NT3", "NT4"))
+        assert not prog.covers(("NT3", "NT1"))      # order matters
+        assert not prog.covers(("NT1", "NT5"))
+
+    def test_covers_empty_branch(self):
+        assert ChainProgram(("NT1",)).covers(())
+
+    def test_covers_duplicate_names(self):
+        prog = ChainProgram(("NT1", "NT2", "NT1"))
+        assert prog.covers(("NT1", "NT1"))          # both occurrences usable
+        assert not ChainProgram(("NT1", "NT2")).covers(("NT1", "NT1"))
+
+    def test_enumerate_respects_area(self):
+        specs = {"NT1": NTSpec("NT1", area=2), "NT2": NTSpec("NT2", area=2),
+                 "NT3": NTSpec("NT3", area=2)}
+        dags = [NTDag.chain(1, "a", ("NT1", "NT2", "NT3"))]
+        names = {p.names for p in enumerate_programs(dags, specs,
+                                                     region_slots=4)}
+        assert ("NT1", "NT2") in names and ("NT2", "NT3") in names
+        assert ("NT1", "NT2", "NT3") not in names   # area 6 > 4 slots
+        assert ("NT1", "NT3") not in names          # not contiguous
+
+    def test_enumerate_dedups_across_dags(self):
+        dags = [NTDag.chain(1, "a", ("NT1", "NT2")),
+                NTDag.chain(2, "b", ("NT1", "NT2"))]
+        progs = enumerate_programs(dags, SPECS, region_slots=4)
+        assert len([p for p in progs if p.names == ("NT1", "NT2")]) == 1
+
+    def test_enumerate_duplicate_names_in_branch(self):
+        dag = NTDag(1, "a", ((("NT1", "NT2", "NT1"),),))
+        names = {p.names for p in enumerate_programs([dag], SPECS,
+                                                     region_slots=4)}
+        assert ("NT1", "NT2", "NT1") in names
+        assert ("NT2", "NT1") in names
+        assert ("NT1",) in names and len(
+            [n for n in names if n == ("NT1",)]) == 1
+
+    def test_builder_output_feeds_enumeration(self):
+        """Builder DAGs drive bitstream enumeration like hand-built ones."""
+        dag = compile_dag(nt("NT1") >> (nt("NT2") | nt("NT3")), 1, "a",
+                          specs=SPECS)
+        names = {p.names for p in enumerate_programs([dag], SPECS, 4)}
+        assert {("NT1",), ("NT2",), ("NT3",)} <= names
+
+
+# ======================================================= policy components ====
+class TestPolicy:
+    def test_drf_admission_observe_allocate(self):
+        adm = DRFAdmission({"a": 2.0, "b": 1.0})
+        adm.observe("a", "bw", 100.0)
+        adm.observe("b", "bw", 100.0)
+        res = adm.allocate({"bw": 90.0})
+        assert res.alloc["a"]["bw"] == pytest.approx(60.0, rel=0.02)
+        assert res.alloc["b"]["bw"] == pytest.approx(30.0, rel=0.02)
+        assert adm.demands() == {}                  # window reset
+
+    def test_drf_admission_extra_demand(self):
+        adm = DRFAdmission()
+        adm.observe("a", "bw", 10.0)
+        res = adm.allocate({"bw": 100.0}, extra={"a": {"bw": 20.0}})
+        assert res.alloc["a"]["bw"] == pytest.approx(30.0)
+
+    def test_drf_admission_empty_window(self):
+        assert DRFAdmission().allocate({"bw": 1.0}) is None
+
+    def test_utilization_scaler_hysteresis(self):
+        sc = UtilizationScaler(hi=0.9, lo=0.2, dwell_ns=100.0)
+        assert sc.decide("x", 95.0, 100.0, 0.0, 1).direction == 0   # arming
+        assert sc.decide("x", 95.0, 100.0, 50.0, 1).direction == 0  # dwell
+        assert sc.decide("x", 95.0, 100.0, 150.0, 1).direction == 1
+        # a dip below hi re-arms the dwell timer
+        sc.decide("x", 95.0, 100.0, 200.0, 2)
+        sc.decide("x", 10.0, 100.0, 250.0, 2)
+        assert sc.decide("x", 95.0, 100.0, 300.0, 2).direction == 0
+
+    def test_utilization_scaler_never_below_one_instance(self):
+        sc = UtilizationScaler(hi=0.9, lo=0.2, dwell_ns=0.0)
+        sc.decide("x", 1.0, 100.0, 0.0, 1)
+        assert sc.decide("x", 1.0, 100.0, 1.0, 1).direction == 0
+        sc.decide("x", 1.0, 100.0, 2.0, 2)
+        assert sc.decide("x", 1.0, 100.0, 3.0, 2).direction == -1
+
+    def test_step_scaler_ladder(self):
+        sc = StepScaler((1, 2, 4, 8), scale_up_ratio=2.0,
+                        scale_down_ratio=0.25)
+        assert sc.decide(1, 3) == 2
+        assert sc.decide(8, 100) == 8               # ladder top
+        assert sc.decide(4, 0) == 2
+        assert sc.decide(1, 0) == 1                 # ladder bottom
+        assert sc.decide(2, 2) == 2                 # in-band
+
+
+# ============================================== cross-substrate acceptance ====
+class TestCrossSubstrate:
+    """The same builder-built VPC DAG runs unmodified on the simulator and
+    as one fused jitted program (ISSUE acceptance criterion)."""
+
+    DAG = nt("firewall") >> nt("nat") >> nt("chacha20")
+
+    def test_sim_backend_stats(self):
+        plat = Platform(SimBackend(), specs=VPC_SPECS)
+        ten = plat.tenant("alice", weight=2.0)
+        dep = ten.deploy(self.DAG)
+        plat.backend.settle()               # PR finishes before traffic
+        dep.source("poisson", rate_gbps=40.0, mean_bytes=1000, seed=1,
+                   duration_ms=2.0)
+        plat.run(duration_ms=2.0)
+        tr = plat.report()["alice"]
+        assert tr.pkts_done > 100
+        assert tr.gbps > 10.0
+        # chains are live for the whole window: no packet pays the 5 ms PR
+        assert tr.mean_latency_us < 1000.0
+        assert tr.p99_latency_us >= tr.mean_latency_us
+
+    def test_sim_settle_resets_measurement_window(self):
+        plat = Platform(SimBackend(), specs=VPC_SPECS)
+        dep = plat.tenant("a").deploy(nt("firewall"))
+        plat.run(duration_ms=1.0)           # idle pre-window (incl. PR wait)
+        plat.backend.settle()
+        dep.source("poisson", rate_gbps=20.0, mean_bytes=1000, seed=1,
+                   duration_ms=2.0)
+        plat.run(duration_ms=2.0)
+        rep = plat.report()
+        # window spans only the 2 ms after settle, not the idle 1 ms + PR
+        assert rep.duration_ns == pytest.approx(2e6, rel=0.01)
+        assert rep["a"].gbps > 10.0
+
+    def test_compute_backend_bit_exact_vs_vpc_chain(self):
+        import jax.numpy as jnp
+        from repro.serving.vpc import make_packets, make_rules, vpc_chain
+        rules = make_rules(32, seed=2)
+        key = jnp.arange(8, dtype=jnp.uint32) * 3 + 1
+        nonce = jnp.arange(3, dtype=jnp.uint32) + 7
+        plat = Platform(ComputeBackend(), specs=VPC_SPECS)
+        dep = plat.tenant("alice").deploy(
+            self.DAG, params={"firewall": {"rules": rules},
+                              "nat": {"nat_ip": 0x0A000001},
+                              "chacha20": {"key": key, "nonce": nonce}})
+        h, p = make_packets(256, seed=1)
+        dep.inject(headers=h, payload=p)
+        plat.run()
+        out = plat.report()["alice"].outputs[0]
+        allow, newh, ct = vpc_chain(h, p, rules, key, nonce)
+        np.testing.assert_array_equal(np.asarray(out["allow"]),
+                                      np.asarray(allow))
+        np.testing.assert_array_equal(np.asarray(out["headers"]),
+                                      np.asarray(newh))
+        np.testing.assert_array_equal(np.asarray(out["payload"]),
+                                      np.asarray(ct))
+
+    def test_compute_fork_join_conflict_rejected(self):
+        plat = Platform(ComputeBackend(), specs=VPC_SPECS)
+        with pytest.raises(DagError, match="both write"):
+            plat.tenant("a").deploy(nt("firewall") | nt("firewall"))
+
+    def test_compute_missing_binding_rejected(self):
+        plat = Platform(ComputeBackend())
+        with pytest.raises(DagError, match="compute binding"):
+            plat.register(NTSpec("made-up"))
+
+    def test_serve_cache_setting_conflict_rejected(self):
+        """The response cache is engine-wide: a second deployment that
+        disagrees must fail loudly, not silently reconfigure tenant A."""
+        from repro import configs
+        from repro.api import SERVE_SPECS, ServeBackend
+        from repro.serving.engine import EngineConfig
+        cfg = configs.get_tiny_config("musicgen-medium").replace(
+            frontend="tokens", vocab_size=64)
+        plat = Platform(ServeBackend(cfg, EngineConfig(batch_sizes=(1,),
+                                                       max_len=32)),
+                        specs=SERVE_SPECS)
+        plat.tenant("a").deploy(nt("cache") >> nt("prefill") >> nt("decode"))
+        with pytest.raises(DagError, match="engine-wide"):
+            plat.tenant("b").deploy(nt("prefill") >> nt("decode"))
+        assert plat.backend.engine.ecfg.enable_cache_nt is True
+
+    def test_tenant_weight_reaches_snic_drf(self):
+        plat = Platform(SimBackend(), specs=VPC_SPECS)
+        plat.tenant("heavy", weight=3.0)
+        snic = plat.backend.snic
+        assert snic.admission.weights["heavy"] == 3.0
+        assert snic.cfg.tenant_weights["heavy"] == 3.0
