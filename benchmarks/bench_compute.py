@@ -1,0 +1,287 @@
+"""Datapath throughput benchmark: batch size x chain x execution path.
+
+Chains: ``vpc`` (firewall >> nat >> chacha20, has a registered megakernel)
+and ``fw_nat`` (firewall >> nat, composed fallback only).  Three ways to
+run a chain:
+
+  - ``per_nt``   — each NT a separate jitted call with a device sync after
+                   every NT of every batch (the per-NT scheduler round-trip
+                   tax the paper's chaining eliminates, §4.2);
+  - ``composed`` — ComputeBackend fallback: whole chain in one XLA program,
+                   batches coalesced, ONE device sync per run();
+  - ``fused``    — ComputeBackend fast path: the vpc_datapath Pallas
+                   megakernel (one kernel launch, tiles resident in VMEM
+                   across all three NTs).
+
+Writes ``BENCH_compute.json`` at the repo root (the perf-trajectory file)
+and returns a flat summary for ``benchmarks.run``.
+
+Modes: ``--smoke`` = tiny batches, CI-friendly (Pallas interpret mode on
+CPU: the megakernel *numbers* are meaningless off-TPU — only the schema and
+bit-exactness checks are binding there, and the JSON says so); ``--full`` =
+real sweep (meaningful on a TPU backend).  Default: full on TPU, smoke
+elsewhere.
+
+CLI:  PYTHONPATH=src python -m benchmarks.bench_compute [--smoke|--full]
+                                                        [--out PATH]
+Exit codes: 0 ok, 1 schema/bit-exactness failure, 2 bad usage.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_OUT = REPO_ROOT / "BENCH_compute.json"
+CHAIN = ("firewall", "nat", "chacha20")     # has a registered megakernel
+CHAINS = {"vpc": CHAIN,
+          "fw_nat": ("firewall", "nat")}    # no megakernel: fallback only
+WIRE_BYTES_PER_PKT = (5 + 16) * 4           # headers + payload, u32
+
+
+def _mk_params():
+    from repro.serving.vpc import make_rules
+    return {"firewall": {"rules": make_rules(32, seed=2)},
+            "nat": {"nat_ip": 0x0A000001},
+            "chacha20": {"key": jnp.arange(8, dtype=jnp.uint32) * 3 + 1,
+                         "nonce": jnp.arange(3, dtype=jnp.uint32) + 7}}
+
+
+def _bench_per_nt(h, p, params, n_batches, chain=CHAIN):
+    """The pre-megakernel baseline: one jit per NT, one sync per NT per
+    batch."""
+    from repro.api.compute_backend import BUILTIN_COMPUTE_NTS
+    nts = [BUILTIN_COMPUTE_NTS[n] for n in chain]
+    compiles = {"n": 0}
+
+    def counted(fn):
+        def wrapper(state, prm):
+            compiles["n"] += 1
+            return fn(state, prm)
+        return jax.jit(wrapper)
+
+    jitted = [counted(nt.fn) for nt in nts]
+
+    def one_batch():
+        state = {"headers": h, "payload": p}
+        orig = state["headers"]
+        for jf, nt in zip(jitted, nts):
+            up = jf(state, params.get(nt.name, {}))
+            jax.block_until_ready(up)       # per-NT scheduler round trip
+            state.update(up)
+        allow = state["allow"]
+        state["headers"] = jnp.where(allow[:, None], state["headers"], orig)
+        state["payload"] = jnp.where(allow[:, None], state["payload"],
+                                     jnp.zeros_like(state["payload"]))
+        jax.block_until_ready(state)
+        return state
+
+    out = one_batch()                        # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n_batches):
+        one_batch()
+    return time.perf_counter() - t0, compiles["n"], out
+
+
+def _bench_backend(use_fused, h, p, params, n_batches, chain=CHAIN):
+    from repro.api import ComputeBackend, Platform, VPC_SPECS, nt_chain
+    be = ComputeBackend(use_fused=use_fused)
+    plat = Platform(be, specs=VPC_SPECS)
+    dep = plat.tenant("bench").deploy(nt_chain(*chain), params=params)
+    dep.inject(headers=h, payload=p)
+    plat.run()                               # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n_batches):
+        dep.inject(headers=h, payload=p)
+        plat.run()                           # one sync per run
+    dt = time.perf_counter() - t0
+    return dt, be.stats["traces"], plat.report()["bench"].outputs[0]
+
+
+def _bench_cache(params, sizes):
+    """50 mixed-size injects: compile count must track distinct buckets,
+    not batches."""
+    from repro.api import ComputeBackend, Platform, VPC_SPECS, bucket_size, nt
+    from repro.serving.vpc import make_packets
+    be = ComputeBackend(use_fused=False)
+    plat = Platform(be, specs=VPC_SPECS)
+    dep = plat.tenant("bench").deploy(
+        nt("firewall") >> nt("nat") >> nt("chacha20"), params=params)
+    for i, n in enumerate(sizes):
+        h, p = make_packets(n, seed=i)
+        dep.inject(headers=h, payload=p)
+        plat.run()
+    return {"injects": len(sizes),
+            "distinct_buckets": len({bucket_size(n) for n in sizes}),
+            "compiles": be.stats["traces"]}
+
+
+def bench_compute(smoke: bool | None = None,
+                  out_path: Path | str = DEFAULT_OUT) -> dict:
+    from repro.serving.vpc import make_packets, vpc_chain
+
+    backend = jax.default_backend()
+    if smoke is None:
+        smoke = backend != "tpu"
+    batch_sizes = [64, 256] if smoke else [1024, 4096, 16384]
+    n_batches = 2 if smoke else 8
+    params = _mk_params()
+
+    sweep, outputs = [], {}
+    for batch in batch_sizes:
+        h, p = make_packets(batch, seed=batch)
+        for chain_name, chain in CHAINS.items():
+            runners = [
+                ("per_nt",
+                 lambda c=chain: _bench_per_nt(h, p, params, n_batches, c)),
+                ("composed",
+                 lambda c=chain: _bench_backend(False, h, p, params,
+                                                n_batches, c))]
+            if chain_name == "vpc":     # only vpc has a megakernel
+                runners.append(
+                    ("fused",
+                     lambda: _bench_backend(True, h, p, params, n_batches)))
+            for path, runner in runners:
+                dt, compiles, out = runner()
+                pkts = batch * n_batches
+                sweep.append({
+                    "chain": chain_name, "path": path, "batch": batch,
+                    "n_batches": n_batches,
+                    "pkts_per_s": round(pkts / dt, 1),
+                    "gbps": round(
+                        pkts * WIRE_BYTES_PER_PKT * 8 / dt / 1e9, 4),
+                    "compiles": compiles,
+                })
+                if chain_name == "vpc":
+                    outputs[(path, batch)] = out
+
+    # bit-exactness: all three paths vs the reference chain, largest batch
+    batch = batch_sizes[-1]
+    h, p = make_packets(batch, seed=batch)
+    allow, newh, ct = vpc_chain(h, p, params["firewall"]["rules"],
+                                params["chacha20"]["key"],
+                                params["chacha20"]["nonce"])
+    oracle = {"allow": allow, "headers": newh, "payload": ct}
+    bitexact = all(
+        np.array_equal(np.asarray(outputs[(path, batch)][k]),
+                       np.asarray(v))
+        for path in ("per_nt", "composed", "fused")
+        for k, v in oracle.items())
+
+    cache = _bench_cache(
+        params, ([3, 10, 100, 7, 9] * 10) if smoke
+        else ([100, 1000, 4000, 900, 70] * 10))
+
+    def rate(path, b):
+        return next(r["pkts_per_s"] for r in sweep
+                    if r["path"] == path and r["batch"] == b
+                    and r["chain"] == "vpc")
+
+    res = {
+        "bench": "bench_compute",
+        "mode": "smoke" if smoke else "full",
+        "backend": backend,
+        "fused_interpret": backend != "tpu",
+        "chain": " >> ".join(CHAIN),
+        "wire_bytes_per_pkt": WIRE_BYTES_PER_PKT,
+        "sweep": sweep,
+        "cache": cache,
+        "bitexact": bitexact,
+        "max_batch": batch,
+        "speedup_fused_vs_per_nt": round(
+            rate("fused", batch) / rate("per_nt", batch), 3),
+        "speedup_composed_vs_per_nt": round(
+            rate("composed", batch) / rate("per_nt", batch), 3),
+        "note": ("interpret-mode megakernel: fused numbers are NOT "
+                 "meaningful off-TPU; schema + bitexact + cache are the "
+                 "binding checks here" if backend != "tpu" else
+                 "compiled megakernel: speedups are meaningful"),
+    }
+    Path(out_path).write_text(json.dumps(res, indent=1))
+    return res
+
+
+def check_schema(res: dict) -> list[str]:
+    """The contract CI enforces (interpret mode: schema + bit-exactness +
+    compile-count, not speed)."""
+    errs = []
+    for k in ("bench", "mode", "backend", "chain", "sweep", "cache",
+              "bitexact", "speedup_fused_vs_per_nt"):
+        if k not in res:
+            errs.append(f"missing key {k!r}")
+    if not res.get("bitexact"):
+        errs.append("paths are not bit-exact vs vpc_chain")
+    for row in res.get("sweep", []):
+        if not {"chain", "path", "batch", "pkts_per_s", "gbps",
+                "compiles"} <= set(row):
+            errs.append(f"malformed sweep row {row}")
+    cache = res.get("cache", {})
+    if cache.get("compiles", 1e9) > cache.get("distinct_buckets", 0):
+        errs.append(
+            f"compile cache leak: {cache.get('compiles')} compiles for "
+            f"{cache.get('distinct_buckets')} buckets over "
+            f"{cache.get('injects')} injects")
+    if not res.get("fused_interpret"):
+        if res.get("speedup_fused_vs_per_nt", 0.0) < 1.5 and \
+                res.get("max_batch", 0) >= 4096:
+            errs.append("fused speedup < 1.5x on a compiled backend")
+    return errs
+
+
+def bench_compute_summary() -> dict:
+    """Entry for benchmarks.run: flat keys only."""
+    res = bench_compute()
+    errs = check_schema(res)
+    if errs:
+        raise RuntimeError("; ".join(errs))
+    flat = {k: v for k, v in res.items() if not isinstance(v, (list, dict))}
+    for row in res["sweep"]:
+        flat[f"{row['chain']}_{row['path']}_b{row['batch']}_pkts_per_s"] = \
+            row["pkts_per_s"]
+    flat["cache_compiles"] = res["cache"]["compiles"]
+    flat["cache_distinct_buckets"] = res["cache"]["distinct_buckets"]
+    return flat
+
+
+def main(argv=None) -> int:
+    args = list(argv if argv is not None else sys.argv[1:])
+    smoke: bool | None = None
+    out = DEFAULT_OUT
+    while args:
+        a = args.pop(0)
+        if a == "--smoke":
+            smoke = True
+        elif a == "--full":
+            smoke = False
+        elif a == "--out":
+            if not args:
+                print("--out needs a path")
+                return 2
+            out = Path(args.pop(0))
+        else:
+            print(f"unknown flag {a!r}; known: --smoke --full --out PATH")
+            return 2
+    res = bench_compute(smoke=smoke, out_path=out)
+    for row in res["sweep"]:
+        print(f"bench_compute,{row['chain']}_{row['path']}_b{row['batch']}"
+              f"_pkts_per_s,{row['pkts_per_s']}")
+    print(f"bench_compute,speedup_fused_vs_per_nt,"
+          f"{res['speedup_fused_vs_per_nt']}")
+    print(f"bench_compute,cache_compiles,{res['cache']['compiles']}")
+    print(f"bench_compute,bitexact,{res['bitexact']}")
+    print(f"bench_compute,out,{out}")
+    errs = check_schema(res)
+    if errs:
+        print("FAIL: " + "; ".join(errs))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,10 +15,12 @@ import time
 from pathlib import Path
 
 from benchmarks import figures
+from benchmarks.bench_compute import bench_compute_summary
 
 OUT = Path(__file__).resolve().parents[1] / "experiments" / "bench"
 
 BENCHES = {
+    "bench_compute": bench_compute_summary,
     "fig2_consolidation_disagg": figures.fig2_consolidation_disagg,
     "fig3_consolidation_dc": figures.fig3_consolidation_dc,
     "fig7_resource_budget": figures.fig7_resource_budget,

@@ -37,8 +37,9 @@ def run_compute(n: int = 4096):
     reps = 5
     for _ in range(reps):
         dep.inject(headers=headers, payload=payload)
-    plat.run()
+        plat.run()          # one async dispatch + ONE device sync per run
     dt = (time.time() - t0) / reps
+    assert plat.backend.stats["traces"] == 1, "bucket cache must hold"
     out = plat.report()["acme"].outputs[0]
     allow, newh, ct = vpc_chain(headers, payload, rules, key, nonce)
     assert np.array_equal(np.asarray(out["allow"]), np.asarray(allow))

@@ -9,12 +9,16 @@ facade, and run it on any substrate:
     par = nt("rx") >> (nt("fw") | nt("dedup")) >> nt("tx")  # fork/join
 
 Backends: SimBackend (event-driven sNIC device model), ComputeBackend
-(NT names bound to batched JAX/Pallas kernels, the DAG fused into one
-jitted program), ServeBackend (multi-tenant LLM serving engine).
+(NT names bound to batched JAX/Pallas kernels; a matching linear chain
+dispatches to a fused Pallas megakernel, everything else becomes one
+XLA-fused jitted program — either way batches are bucket-padded, coalesced
+and run with a single device sync per run()), ServeBackend (multi-tenant
+LLM serving engine).
 """
 from .backend import Backend, PlatformReport, TenantReport  # noqa: F401
-from .compute_backend import (VPC_SPECS, ComputeBackend,  # noqa: F401
-                              ComputeNT)
+from .compute_backend import (FUSED_KERNELS, VPC_SPECS,  # noqa: F401
+                              WIRE_FIELDS, ComputeBackend, ComputeNT,
+                              bucket_size)
 from .dag import (DagError, DagExpr, compile_dag, nt,  # noqa: F401
                   nt_chain, validate_dag)
 from .platform import Deployment, Platform, Tenant  # noqa: F401

@@ -1,12 +1,42 @@
-"""ComputeBackend: NT names bound to real batched JAX/Pallas kernels.
+"""ComputeBackend: NT names bound to real batched JAX/Pallas kernels, with
+an async zero-resync runtime.
 
 The same builder DAG that drives the event simulator executes here as *one
-fused jitted program* — the generalization of the hardcoded
+fused program* — the generalization of the hardcoded
 :func:`repro.serving.vpc.vpc_chain`.  Each compute NT is a pure function
 over a *packet-batch state* (a dict of arrays: ``headers`` (N, 5) u32,
-``payload`` (N, 16) u32, ``allow`` (N,) bool, ...); chaining composes the
-functions inside one ``jax.jit``, so XLA fuses the whole DAG exactly like
-placing an NT chain in a single region (no scheduler round trips).
+``payload`` (N, 16) u32, ``allow`` (N,) bool, ``ctr`` (N,) u32, ...);
+chaining composes the functions inside one ``jax.jit``, so XLA fuses the
+whole DAG exactly like placing an NT chain in a single region (no scheduler
+round trips).
+
+Runtime design (the paper's "schedule the chain once" insight, §4.2, applied
+to the host runtime):
+
+  - **Fused-kernel fast path.**  A linear chain whose stage names match a
+    registered fused Pallas kernel (``firewall >> nat >> chacha20`` ->
+    :func:`repro.kernels.vpc_datapath.vpc_datapath`) dispatches to it: one
+    kernel launch for the whole chain, packet tiles resident in VMEM across
+    all NTs.  Everything else falls back to the composed XLA path.
+  - **Shape-bucketed compile cache.**  Batches are padded to power-of-two
+    buckets, so the number of distinct shapes that can ever reach
+    ``jax.jit`` — and therefore the number of compilations — is O(log N),
+    not O(#batches).  Pad rows are safe for the built-in NTs because every
+    one is row-wise (pad outputs are sliced off after the run); a custom
+    ``ComputeNT`` that reduces *across* packets must mask with the
+    ``state["valid"]`` row mask the runtime provides, or pad rows leak
+    into its result.
+  - **Batch coalescing.**  Same-DAG, same-signature injects pending at
+    ``run()`` merge into one dispatch.  The ChaCha keystream counter is
+    per-packet *state* (``ctr``, synthesized at inject time), so merging
+    batches never changes any packet's ciphertext.
+  - **One device sync per run().**  Every pending batch is dispatched
+    asynchronously; a single ``block_until_ready`` at the end is the only
+    host<->device synchronization point, and the throughput window.
+  - **Buffer donation.**  Dispatch inputs are donated to XLA where the
+    backend supports it.  The bucket-padding step always materializes fresh
+    buffers, so caller-owned arrays are never donated (inject the same
+    arrays twice and both runs see identical bits).
 
 Fork/join semantics mirror the sync buffer (§4.2): every branch of a stage
 reads the stage's input state; the join merges each branch's declared
@@ -20,17 +50,34 @@ denied packets keep their original header and leave with a zeroed payload
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.nt import GBPS, NTDag, NTSpec
+from repro.kernels.vpc_datapath import vpc_datapath
 from repro.serving.vpc import chacha20_xor_jnp, firewall, nat_rewrite
 
 from .backend import PlatformReport, TenantReport
 from .dag import DagError
+
+#: fields that actually cross the wire; everything else (verdict bits,
+#: counters, validity masks, scratch) is metadata and must not count
+#: toward Gbps
+WIRE_FIELDS = ("headers", "payload")
+
+#: smallest pad bucket; buckets are _MIN_BUCKET * 2**k
+_MIN_BUCKET = 8
+
+
+def bucket_size(n: int) -> int:
+    """Smallest power-of-two bucket (>= _MIN_BUCKET) holding ``n`` rows."""
+    b = _MIN_BUCKET
+    while b < n:
+        b <<= 1
+    return b
 
 
 @dataclass(frozen=True)
@@ -39,11 +86,18 @@ class ComputeNT:
 
     ``fn(state, params) -> updates``: reads any state fields, returns the
     dict of fields it produces.  ``writes`` declares those fields so the
-    fork/join merge can detect conflicts at build time.
+    fork/join merge can detect conflicts at build time.  ``prep(n, params)``
+    optionally synthesizes per-packet state fields at inject time (e.g. the
+    ChaCha keystream counter) so that batch coalescing and bucket padding
+    cannot change the NT's output for any real packet; ``prep_fields``
+    names them, so inject can skip ``prep`` when the caller already
+    supplied every one.
     """
     name: str
     fn: Callable[[dict, dict], dict]
     writes: tuple[str, ...]
+    prep: Callable[[int, dict], dict] | None = None
+    prep_fields: tuple[str, ...] = ()
 
 
 # ------------------------------------------------------- built-in NT library --
@@ -61,13 +115,20 @@ def _nat_nt(state, params):
 def _chacha_nt(state, params):
     return {"payload": chacha20_xor_jnp(state["payload"], params["key"],
                                         params["nonce"],
-                                        params.get("counter0", 1))}
+                                        params.get("counter0", 1),
+                                        ctr=state.get("ctr"))}
+
+
+def _chacha_prep(n, params):
+    c0 = params.get("counter0", 1)
+    return {"ctr": jnp.uint32(c0) + jnp.arange(n, dtype=jnp.uint32)}
 
 
 BUILTIN_COMPUTE_NTS: dict[str, ComputeNT] = {
     "firewall": ComputeNT("firewall", _fw_nt, writes=("allow",)),
     "nat": ComputeNT("nat", _nat_nt, writes=("headers",)),
-    "chacha20": ComputeNT("chacha20", _chacha_nt, writes=("payload",)),
+    "chacha20": ComputeNT("chacha20", _chacha_nt, writes=("payload",),
+                          prep=_chacha_prep, prep_fields=("ctr",)),
 }
 
 # nominal service models for the same NT names on the sim substrate, so one
@@ -79,24 +140,130 @@ VPC_SPECS: dict[str, NTSpec] = {
 }
 
 
+# --------------------------------------------------- fused kernel registry --
+def _vpc_fused_factory(params: dict) -> Callable | None:
+    """Fused launcher for the canonical VPC chain, or None if the deployment
+    params cannot feed the megakernel (missing rules/key/nonce).  The
+    deploy-time params are only a capability probe — every param is re-read
+    from the runtime params argument, the same binding the composed path
+    gives every NT."""
+    try:
+        params["firewall"]["rules"]
+        params["chacha20"]["key"]
+        params["chacha20"]["nonce"]
+    except (KeyError, TypeError):
+        return None
+
+    def program(state: dict, params: dict) -> dict:
+        ch = params["chacha20"]
+        allow, hout, pout = vpc_datapath(
+            state["headers"], state["payload"], params["firewall"]["rules"],
+            ch["key"], ch["nonce"],
+            nat_ip=params.get("nat", {}).get("nat_ip", 0x0A000001),
+            counter0=ch.get("counter0", 1), ctr=state.get("ctr"))
+        return {**state, "allow": allow, "headers": hout, "payload": pout}
+
+    return program
+
+
+#: exact linear-chain stage names -> fused program factory(params)
+FUSED_KERNELS: dict[tuple[str, ...], Callable[[dict], Callable | None]] = {
+    ("firewall", "nat", "chacha20"): _vpc_fused_factory,
+}
+
+
+def _linear_chain(dag: NTDag) -> tuple[str, ...] | None:
+    """The dag's NT names if it is one linear chain, else None."""
+    names: list[str] = []
+    for stage in dag.stages:
+        if len(stage) != 1:
+            return None
+        names.extend(stage[0])
+    return tuple(names)
+
+
+# ----------------------------------------------------------- runtime state --
 @dataclass
 class _Deployment:
     dag: NTDag
-    program: Callable            # jitted (state, params) -> state
     params: dict
-    results: list
+    fused: Callable | None                    # fused program or None
+    composed: Callable                        # composed program (fallback)
+    results: list = field(default_factory=list)
+    # (bucket_rows, path) -> jitted program; one jit instance per bucket so
+    # the compile cache is explicit and countable
+    cache: dict[tuple[int, str], Callable] = field(default_factory=dict)
+
+
+def _rows(batch: dict) -> int:
+    for v in batch.values():
+        if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1:
+            return int(v.shape[0])
+    return 0
+
+
+def _signature(batch: dict):
+    """Coalescing key: batches merge only when their field names, trailing
+    shapes and dtypes agree (arrays concatenate along the packet axis)."""
+    items = []
+    for k in sorted(batch):
+        v = batch[k]
+        if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1:
+            items.append((k, tuple(v.shape[1:]), str(v.dtype)))
+        else:                      # non-array field: never coalesced
+            items.append((k, "scalar", id(v)))
+    return tuple(items)
+
+
+def _fill_bucket(arrays, b: int):
+    """One fresh bucket buffer filled at per-batch offsets: coalescing and
+    pad-to-bucket in a single copy of the packet data (and, like
+    :func:`_pad_to`, never handing a caller-owned buffer to the donated
+    program)."""
+    first = jnp.asarray(arrays[0])
+    buf = jnp.zeros((b,) + first.shape[1:], first.dtype)
+    off = 0
+    for a in arrays:
+        a = jnp.asarray(a)
+        buf = buf.at[off:off + a.shape[0]].set(a)
+        off += a.shape[0]
+    return buf
+
+
+def _pad_to(x, b: int):
+    """Pad the packet axis to ``b`` rows.  Always materializes a fresh
+    buffer (even when no padding is needed, and for 0-d arrays) so the
+    jitted program can donate its inputs without ever consuming a
+    caller-owned array."""
+    x = jnp.asarray(x)
+    if x.ndim == 0:
+        return x + jnp.zeros((), x.dtype)     # fresh 0-d buffer
+    buf = jnp.zeros((b,) + x.shape[1:], x.dtype)
+    return buf.at[: x.shape[0]].set(x)
 
 
 class ComputeBackend:
     name = "compute"
 
-    def __init__(self, nts: dict[str, ComputeNT] | None = None):
+    def __init__(self, nts: dict[str, ComputeNT] | None = None,
+                 use_fused: bool | None = None, donate: bool = True):
         self.nts = dict(BUILTIN_COMPUTE_NTS)
         self.nts.update(nts or {})
+        # default: megakernels only where they compile (TPU).  Off-TPU the
+        # fused path would run in Pallas interpret mode — a correctness
+        # harness, not a datapath — so the composed XLA path is the default
+        # there.  Pass use_fused=True to force (tests/benches do).
+        self.use_fused = (jax.default_backend() == "tpu"
+                          if use_fused is None else use_fused)
+        # safe because _pad_to always hands the program fresh buffers:
+        # caller-owned arrays are never donated
+        self.donate = donate
         self.deployments: dict[int, _Deployment] = {}
         self.tenants: dict[str, float] = {}
         self._pending: list[tuple[int, dict]] = []
         self._elapsed_s = 0.0
+        self.stats = {"traces": 0, "dispatches": 0, "fused_dispatches": 0,
+                      "batches": 0, "coalesced_batches": 0, "runs": 0}
 
     # ----------------------------------------------------------- protocol --
     def register(self, spec: NTSpec) -> None:
@@ -111,8 +278,8 @@ class ComputeBackend:
     def add_tenant(self, tenant: str, weight: float) -> None:
         self.tenants[tenant] = weight
 
-    def _compile(self, dag: NTDag, params: dict) -> Callable:
-        """Lower the DAG to one fused function and jit it."""
+    # ------------------------------------------------------------ compile --
+    def _validate(self, dag: NTDag) -> None:
         for stage in dag.stages:
             writer: dict[str, tuple[int, str]] = {}
             for bi, branch in enumerate(stage):
@@ -128,6 +295,9 @@ class ComputeBackend:
                                 "ordering to merge them")
                         writer[fld] = (bi, name)
 
+    def _composed_program(self, dag: NTDag) -> Callable:
+        """Lower the DAG to one fused-by-XLA function (the fallback path for
+        chains with no registered megakernel)."""
         def program(state: dict, params: dict) -> dict:
             state = dict(state)
             orig_headers = state.get("headers")
@@ -156,12 +326,41 @@ class ComputeBackend:
                         jnp.zeros_like(state["payload"]))
             return state
 
-        return jax.jit(program)
+        return program
 
+    def _jit(self, program: Callable) -> Callable:
+        """One jit instance per (deployment, bucket, path) cache slot; the
+        wrapper body runs exactly once per trace, so ``stats['traces']``
+        counts real compilations."""
+        def traced(state: dict, params: dict) -> dict:
+            self.stats["traces"] += 1
+            return program(state, params)
+
+        if self.donate:
+            return jax.jit(traced, donate_argnums=0)
+        return jax.jit(traced)
+
+    def _get_program(self, dep: _Deployment, bucket: int,
+                     path: str) -> Callable:
+        key = (bucket, path)
+        prog = dep.cache.get(key)
+        if prog is None:
+            prog = self._jit(dep.fused if path == "fused" else dep.composed)
+            dep.cache[key] = prog
+        return prog
+
+    # ------------------------------------------------------------- deploy --
     def deploy(self, dag: NTDag, params: dict | None = None, **_kw) -> None:
         params = params or {}
+        self._validate(dag)
+        fused = None
+        if self.use_fused:
+            chain = _linear_chain(dag)
+            factory = FUSED_KERNELS.get(chain) if chain else None
+            if factory is not None:
+                fused = factory(params)
         self.deployments[dag.uid] = _Deployment(
-            dag, self._compile(dag, params), params, results=[])
+            dag, params, fused, self._composed_program(dag))
 
     def inject(self, tenant: str, dag_uid: int, state: dict | None = None,
                **fields) -> None:
@@ -169,35 +368,103 @@ class ComputeBackend:
         batch arrays, e.g. ``headers=(N, 5) u32, payload=(N, 16) u32``."""
         if dag_uid not in self.deployments:
             raise KeyError(f"DAG {dag_uid} not deployed")
+        dep = self.deployments[dag_uid]
         batch = dict(state or {})
         batch.update(fields)
+        n = _rows(batch)
+        for stage in dep.dag.stages:      # synthesize per-packet state (ctr)
+            for branch in stage:
+                for name in branch:
+                    nt = self.nts.get(name)
+                    if nt is None or nt.prep is None:
+                        continue
+                    if nt.prep_fields and all(f in batch
+                                              for f in nt.prep_fields):
+                        continue          # caller supplied them all
+                    for k, v in nt.prep(
+                            n, dep.params.get(name, {})).items():
+                        batch.setdefault(k, v)
         self._pending.append((dag_uid, batch))
+        self.stats["batches"] += 1
 
+    # ---------------------------------------------------------------- run --
     def run(self, **_kw) -> None:
-        """Execute every pending batch through its fused program."""
-        t0 = time.time()
-        for dag_uid, batch in self._pending:
-            dep = self.deployments[dag_uid]
-            out = dep.program(batch, dep.params)
-            out = {k: v.block_until_ready() if hasattr(v, "block_until_ready")
-                   else v for k, v in out.items()}
-            dep.results.append(out)
+        """Dispatch every pending batch asynchronously (coalescing same-DAG
+        same-signature injects), then synchronize with the device ONCE."""
+        t0 = time.perf_counter()
+        groups: dict[tuple, list[tuple[int, dict]]] = {}
+        for order, (dag_uid, batch) in enumerate(self._pending):
+            groups.setdefault((dag_uid, _signature(batch)),
+                              []).append((order, batch))
         self._pending.clear()
-        self._elapsed_s += time.time() - t0
 
+        launched = []
+        for (dag_uid, _sig), entries in groups.items():
+            dep = self.deployments[dag_uid]
+            orders = [order for order, _ in entries]
+            batches = [batch for _, batch in entries]
+            sizes = [_rows(b) for b in batches]
+            n = sum(sizes)
+            bucket = bucket_size(n)
+            if len(batches) > 1:
+                self.stats["coalesced_batches"] += len(batches)
+            state = {}
+            for k, v in batches[0].items():
+                if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1:
+                    state[k] = _fill_bucket([b[k] for b in batches], bucket)
+                elif hasattr(v, "shape"):         # 0-d: fresh copy
+                    state[k] = _pad_to(v, bucket)
+                else:
+                    state[k] = v
+            state["valid"] = (
+                jnp.arange(bucket, dtype=jnp.int32) < n)
+            path = ("fused" if dep.fused is not None
+                    and "allow" not in batches[0] else "composed")
+            out = self._get_program(dep, bucket, path)(state, dep.params)
+            launched.append((dep, orders, sizes, out))
+            self.stats["dispatches"] += 1
+            if path == "fused":
+                self.stats["fused_dispatches"] += 1
+
+        jax.block_until_ready([o for *_, o in launched])    # the ONE sync
+        self._elapsed_s += time.perf_counter() - t0
+        self.stats["runs"] += 1
+
+        split = []                # un-coalesce, drop pad rows
+        for dep, orders, sizes, out in launched:
+            off = 0
+            for order, s in zip(orders, sizes):
+                res = {}
+                for k, v in out.items():
+                    if k == "valid":
+                        continue
+                    if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1:
+                        res[k] = v[off:off + s]
+                    else:
+                        res[k] = v
+                split.append((order, dep, res))
+                off += s
+        for _, dep, res in sorted(split, key=lambda t: t[0]):
+            dep.results.append(res)       # results stay in inject order
+
+    # ------------------------------------------------------------- report --
     def report(self) -> PlatformReport:
         rep = PlatformReport(backend=self.name,
                              duration_ns=self._elapsed_s * 1e9)
+        rep.extra["compiles"] = self.stats["traces"]
+        rep.extra.update(self.stats)
         for dep in self.deployments.values():
             tenant = dep.dag.tenant
             tr = rep.tenants.setdefault(
                 tenant, TenantReport(tenant=tenant, backend=self.name))
             for out in dep.results:
-                n = next((int(v.shape[0]) for v in out.values()
-                          if hasattr(v, "shape") and v.ndim >= 1), 0)
+                n = _rows(out)
+                # throughput counts wire fields only: verdict bits, counters
+                # and scratch fields are not packet bytes
                 nbytes = sum(
-                    v.size * v.dtype.itemsize for v in out.values()
-                    if hasattr(v, "dtype"))
+                    v.size * v.dtype.itemsize
+                    for k, v in out.items()
+                    if k in WIRE_FIELDS and hasattr(v, "dtype"))
                 tr.pkts_done += n
                 tr.bytes_done += nbytes
                 tr.outputs.append(out)
@@ -206,5 +473,6 @@ class ComputeBackend:
         return rep
 
 
-__all__ = ["BUILTIN_COMPUTE_NTS", "ComputeBackend", "ComputeNT", "VPC_SPECS",
+__all__ = ["BUILTIN_COMPUTE_NTS", "ComputeBackend", "ComputeNT",
+           "FUSED_KERNELS", "VPC_SPECS", "WIRE_FIELDS", "bucket_size",
            "GBPS"]

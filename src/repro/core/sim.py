@@ -55,6 +55,11 @@ class EventSim:
         self.at(self.now + delay_ns, fn, *args)
 
     def run(self, until_ns: float = math.inf, max_events: int = 50_000_000):
+        """Process events with timestamp <= ``until_ns``, then advance the
+        clock to ``min(until_ns, next-event-time)`` — an idle window (or one
+        whose remaining events all lie past the horizon) still moves ``now``
+        to the horizon, so measurement windows span exactly what was asked
+        for."""
         n = 0
         while self._heap and n < max_events:
             t, _, fn, args = self._heap[0]
@@ -64,7 +69,12 @@ class EventSim:
             self.now = max(self.now, t)
             fn(*args)
             n += 1
-        self.now = max(self.now, min(until_ns, self.now) if self._heap else until_ns)
+        if self._heap and self._heap[0][0] <= until_ns:
+            return n          # stopped on the event budget: clock stays at
+                              # the last event actually processed
+        horizon = min(until_ns, self._heap[0][0]) if self._heap else until_ns
+        if math.isfinite(horizon):
+            self.now = max(self.now, horizon)
         return n
 
 

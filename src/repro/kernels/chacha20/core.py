@@ -1,0 +1,74 @@
+"""Shared ChaCha20 round arithmetic (RFC 8439), pure jnp.
+
+One implementation of the add-rotate-xor double round feeds three callers:
+
+  - :mod:`repro.serving.vpc` — the XLA chain path (``chacha20_xor_jnp``);
+  - :mod:`repro.kernels.chacha20.kernel` — the standalone Pallas NT;
+  - :mod:`repro.kernels.vpc_datapath.kernel` — the fused VPC megakernel.
+
+State is a dict ``word-index -> u32 array``; every word carries one lane
+per ChaCha block, so the quarter rounds are full-width VPU ops whatever
+the caller's block layout.  This module must stay pallas-free: the XLA
+path imports it without pulling the TPU toolchain.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+CONSTANTS = (0x61707865, 0x3320646e, 0x79622d32, 0x6b206574)
+
+
+def rotl32(x, n: int):
+    return (x << jnp.uint32(n)) | (x >> jnp.uint32(32 - n))
+
+
+def quarter(s, a, b, c, d):
+    sa, sb, sc, sd = s[a], s[b], s[c], s[d]
+    sa = sa + sb
+    sd = rotl32(sd ^ sa, 16)
+    sc = sc + sd
+    sb = rotl32(sb ^ sc, 12)
+    sa = sa + sb
+    sd = rotl32(sd ^ sa, 8)
+    sc = sc + sd
+    sb = rotl32(sb ^ sc, 7)
+    return {**s, a: sa, b: sb, c: sc, d: sd}
+
+
+def chacha_rounds(state):
+    """state: dict word-index -> u32 array. 20 rounds (10 double rounds)."""
+    s = state
+    for _ in range(10):
+        # column rounds
+        s = quarter(s, 0, 4, 8, 12)
+        s = quarter(s, 1, 5, 9, 13)
+        s = quarter(s, 2, 6, 10, 14)
+        s = quarter(s, 3, 7, 11, 15)
+        # diagonal rounds
+        s = quarter(s, 0, 5, 10, 15)
+        s = quarter(s, 1, 6, 11, 12)
+        s = quarter(s, 2, 7, 8, 13)
+        s = quarter(s, 3, 4, 9, 14)
+    return s
+
+
+def init_state(key_words, nonce_words, ctr):
+    """Build the 16-word initial state.  ``key_words``: 8 u32 scalars/arrays
+    broadcastable to ``ctr``'s shape; ``nonce_words``: 3; ``ctr``: u32 array
+    (one counter per block/lane)."""
+    shape = ctr.shape
+    init = {w: jnp.full(shape, CONSTANTS[w], jnp.uint32) for w in range(4)}
+    for w in range(8):
+        init[4 + w] = jnp.broadcast_to(key_words[w], shape).astype(jnp.uint32)
+    init[12] = ctr.astype(jnp.uint32)
+    for w in range(3):
+        init[13 + w] = jnp.broadcast_to(nonce_words[w],
+                                        shape).astype(jnp.uint32)
+    return init
+
+
+def keystream(init):
+    """Run the rounds and apply the final feed-forward add; returns the dict
+    ``word-index -> u32 array`` of keystream words."""
+    s = chacha_rounds(init)
+    return {w: s[w] + init[w] for w in range(16)}

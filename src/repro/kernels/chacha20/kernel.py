@@ -9,7 +9,9 @@ state word.  Same security role (stream cipher), TPU-native arithmetic.
 
 Layout: one ChaCha block is 16 u32 words.  We process ``bn`` blocks per grid
 step with state laid out (16, bn): word index on the sublane dim, block index
-on the lane dim, so all rotations/adds are full-width VPU ops.
+on the lane dim, so all rotations/adds are full-width VPU ops.  The round
+arithmetic itself lives in :mod:`repro.kernels.chacha20.core`, shared with
+the XLA path and the fused VPC datapath megakernel.
 """
 from __future__ import annotations
 
@@ -19,41 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-CONSTANTS = (0x61707865, 0x3320646e, 0x79622d32, 0x6b206574)
-
-
-def _rotl(x, n: int):
-    return (x << jnp.uint32(n)) | (x >> jnp.uint32(32 - n))
-
-
-def _quarter(s, a, b, c, d):
-    sa, sb, sc, sd = s[a], s[b], s[c], s[d]
-    sa = sa + sb
-    sd = _rotl(sd ^ sa, 16)
-    sc = sc + sd
-    sb = _rotl(sb ^ sc, 12)
-    sa = sa + sb
-    sd = _rotl(sd ^ sa, 8)
-    sc = sc + sd
-    sb = _rotl(sb ^ sc, 7)
-    return {**s, a: sa, b: sb, c: sc, d: sd}
-
-
-def _chacha_block_rounds(state):
-    """state: dict word-index -> (bn,) u32. 20 rounds (10 double rounds)."""
-    s = state
-    for _ in range(10):
-        # column rounds
-        s = _quarter(s, 0, 4, 8, 12)
-        s = _quarter(s, 1, 5, 9, 13)
-        s = _quarter(s, 2, 6, 10, 14)
-        s = _quarter(s, 3, 7, 11, 15)
-        # diagonal rounds
-        s = _quarter(s, 0, 5, 10, 15)
-        s = _quarter(s, 1, 6, 11, 12)
-        s = _quarter(s, 2, 7, 8, 13)
-        s = _quarter(s, 3, 4, 9, 14)
-    return s
+from .core import CONSTANTS, chacha_rounds, init_state  # noqa: F401
 
 
 def _chacha_kernel(key_ref, nonce_ref, data_ref, out_ref, *, bn: int,
@@ -63,15 +31,9 @@ def _chacha_kernel(key_ref, nonce_ref, data_ref, out_ref, *, bn: int,
     nonce = nonce_ref[...]                               # (1, 3) u32
     ctr = (jnp.uint32(counter0) + jnp.uint32(i * bn)
            + jax.lax.broadcasted_iota(jnp.uint32, (1, bn), 1))[0]
-    init = {}
-    for w in range(4):
-        init[w] = jnp.full((bn,), CONSTANTS[w], jnp.uint32)
-    for w in range(8):
-        init[4 + w] = jnp.broadcast_to(key[0, w], (bn,))
-    init[12] = ctr
-    for w in range(3):
-        init[13 + w] = jnp.broadcast_to(nonce[0, w], (bn,))
-    s = _chacha_block_rounds(init)
+    init = init_state([key[0, w] for w in range(8)],
+                      [nonce[0, w] for w in range(3)], ctr)
+    s = chacha_rounds(init)
     data = data_ref[...]                                 # (bn, 16) u32
     for w in range(16):
         ks = s[w] + init[w]                              # final add

@@ -1,0 +1,4 @@
+"""Fused VPC datapath megakernel: firewall -> NAT -> ChaCha20 in one Pallas
+launch (tiles stay in VMEM across all three NTs)."""
+from .ops import vpc_datapath  # noqa: F401
+from .ref import vpc_datapath_ref  # noqa: F401

@@ -1,0 +1,60 @@
+"""Jittable wrapper for the fused VPC datapath megakernel.
+
+Handles everything the raw kernel keeps static: rule preprocessing (mask
+popcounts, bool->u32), default per-packet counters, padding the packet axis
+to a tile multiple, backend selection (interpret off-TPU), and slicing the
+pad rows back off.  The result triple matches ``vpc_chain`` bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import vpc_datapath_kernel_call
+
+
+def _popcount32(masks):
+    """Per-mask set-bit count, identical to the reference firewall's
+    ``unpackbits`` expression (pure u32 arithmetic, jit-safe)."""
+    x = masks.astype(jnp.uint32)
+    x = x - ((x >> jnp.uint32(1)) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> jnp.uint32(2))
+                                        & jnp.uint32(0x33333333))
+    x = (x + (x >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> jnp.uint32(24)
+
+
+def vpc_datapath(headers, payload, rules, key, nonce,
+                 nat_ip: int = 0x0A000001, counter0: int = 1, ctr=None,
+                 salt: int = 0x9e3779b9, block_n: int = 256,
+                 interpret: bool | None = None):
+    """Fused firewall -> NAT -> ChaCha20 over a packet batch, one kernel
+    launch.  Same signature contract as ``vpc_chain``: headers (N, 5) u32,
+    payload (N, 16) u32 -> (allow (N,) bool, new_headers, ciphertext).
+
+    ``ctr``: optional (N,) u32 per-packet keystream counters (defaults to
+    ``counter0 + arange(N)``, the ``vpc_chain`` convention).  ``nat_ip`` and
+    ``counter0`` may be traced values — nothing here is a compile-time
+    static except the tile size."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N = headers.shape[0]
+    if N == 0:                  # empty batch: nothing to launch
+        return (jnp.zeros((0,), bool), headers, payload)
+    if ctr is None:
+        ctr = jnp.uint32(counter0) + jnp.arange(N, dtype=jnp.uint32)
+    prefixes, masks, rallow = rules
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        headers = jnp.pad(headers, ((0, pad), (0, 0)))
+        payload = jnp.pad(payload, ((0, pad), (0, 0)))
+        ctr = jnp.pad(ctr, (0, pad))
+    allow_u32, hout, pout = vpc_datapath_kernel_call(
+        headers, payload, ctr,
+        prefixes.astype(jnp.uint32), masks.astype(jnp.uint32),
+        _popcount32(masks), rallow.astype(jnp.uint32),
+        key.astype(jnp.uint32), nonce.astype(jnp.uint32),
+        jnp.asarray(nat_ip, jnp.uint32), salt=salt, block_n=bn,
+        interpret=interpret)
+    return (allow_u32[:N, 0] != 0, hout[:N], pout[:N])

@@ -1,0 +1,27 @@
+"""Reference for the fused VPC datapath: the exact same jnp building blocks
+as :func:`repro.serving.vpc.vpc_chain`, composed in one function.
+
+This is the bit-exactness oracle for the megakernel: ``vpc_datapath_ref``
+must equal ``vpc_chain`` for ``ctr=None`` (it calls the same firewall /
+nat_rewrite / chacha20_xor_jnp code), and the Pallas kernel must equal this
+ref for any explicit per-packet counter.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.serving.vpc import chacha20_xor_jnp, firewall, nat_rewrite
+
+
+def vpc_datapath_ref(headers, payload, rules, key, nonce,
+                     nat_ip: int = 0x0A000001, counter0: int = 1, ctr=None):
+    """headers: (N, 5) u32; payload: (N, 16) u32; rules: (prefixes, masks,
+    allow).  Returns (allow_mask, new_headers, ciphertext) — the same triple
+    and bits as ``vpc_chain``."""
+    allow = firewall(headers, rules)
+    newh = nat_rewrite(headers, nat_ip)
+    ct = chacha20_xor_jnp(payload, key, nonce, counter0, ctr=ctr)
+    # denied packets keep original header and payload zeroed
+    newh = jnp.where(allow[:, None], newh, headers)
+    ct = jnp.where(allow[:, None], ct, jnp.zeros_like(ct))
+    return allow, newh, ct

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-CONSTANTS = (0x61707865, 0x3320646e, 0x79622d32, 0x6b206574)
+from repro.kernels.chacha20.core import CONSTANTS, init_state, keystream
 
 
 # =============================================================== firewall ====
@@ -40,10 +40,12 @@ def firewall(headers, rules):
     prefixes, masks, allow = rules
     dst = headers[:, 1][:, None]                       # (N, 1)
     hit = (dst & masks[None, :]) == prefixes[None, :]  # (N, R)
-    # longest mask wins: score = mask popcount where hit else -1
+    # longest mask wins: score = mask popcount where hit else -1 (mlen must
+    # be signed: an unsigned mlen wraps the -1 sentinel to 0xFFFFFFFF and
+    # every non-hitting rule outranks every real hit)
     mlen = jnp.sum(jnp.unpackbits(
         masks.view(jnp.uint8).reshape(-1, 4), axis=1), axis=1)
-    score = jnp.where(hit, mlen[None, :], -1)
+    score = jnp.where(hit, mlen[None, :].astype(jnp.int32), -1)
     best = jnp.argmax(score, axis=1)
     any_hit = jnp.any(hit, axis=1)
     return jnp.where(any_hit, allow[best], True)
@@ -65,36 +67,23 @@ def nat_rewrite(headers, nat_ip: int, salt: int = 0x9e3779b9):
 
 
 # ================================================================ encrypt ====
-def _rotl(x, n):
-    return (x << jnp.uint32(n)) | (x >> jnp.uint32(32 - n))
-
-
-def _qr(s, a, b, c, d):
-    s[a] = s[a] + s[b]
-    s[d] = _rotl(s[d] ^ s[a], 16)
-    s[c] = s[c] + s[d]
-    s[b] = _rotl(s[b] ^ s[c], 12)
-    s[a] = s[a] + s[b]
-    s[d] = _rotl(s[d] ^ s[a], 8)
-    s[c] = s[c] + s[d]
-    s[b] = _rotl(s[b] ^ s[c], 7)
-
-
-def chacha20_xor_jnp(data, key, nonce, counter0: int = 1):
+def chacha20_xor_jnp(data, key, nonce, counter0: int = 1, ctr=None):
     """Vectorized ChaCha20 over (N, 16) u32 blocks (XLA path; the Pallas
-    kernel in repro.kernels.chacha20 is the TPU version of this NT)."""
+    kernels in repro.kernels.{chacha20,vpc_datapath} are the TPU versions of
+    this NT).  The round arithmetic is shared with those kernels via
+    :mod:`repro.kernels.chacha20.core`.
+
+    ``ctr`` optionally gives each block an explicit u32 counter (shape (N,)).
+    The default is ``counter0 + arange(N)`` — making the counter part of the
+    packet state lets the async runtime coalesce batches without changing
+    any packet's keystream."""
     N = data.shape[0]
-    ctr = jnp.uint32(counter0) + jnp.arange(N, dtype=jnp.uint32)
-    s = [jnp.broadcast_to(jnp.uint32(CONSTANTS[w]), (N,)) for w in range(4)]
-    s += [jnp.broadcast_to(key[w], (N,)) for w in range(8)]
-    s += [ctr] + [jnp.broadcast_to(nonce[w], (N,)) for w in range(3)]
-    init = list(s)
-    for _ in range(10):
-        _qr(s, 0, 4, 8, 12); _qr(s, 1, 5, 9, 13)     # noqa: E702
-        _qr(s, 2, 6, 10, 14); _qr(s, 3, 7, 11, 15)   # noqa: E702
-        _qr(s, 0, 5, 10, 15); _qr(s, 1, 6, 11, 12)   # noqa: E702
-        _qr(s, 2, 7, 8, 13); _qr(s, 3, 4, 9, 14)     # noqa: E702
-    ks = jnp.stack([s[w] + init[w] for w in range(16)], axis=1)
+    if ctr is None:
+        ctr = jnp.uint32(counter0) + jnp.arange(N, dtype=jnp.uint32)
+    init = init_state([key[w] for w in range(8)],
+                      [nonce[w] for w in range(3)], ctr.astype(jnp.uint32))
+    ks_words = keystream(init)
+    ks = jnp.stack([ks_words[w] for w in range(16)], axis=1)
     return data ^ ks
 
 

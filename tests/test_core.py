@@ -27,6 +27,47 @@ def mk_snic(sim, mode="snic", **kw):
     return SNIC(sim, SNICConfig(mode=mode, **kw), SPECS)
 
 
+# =============================================================== EventSim ====
+class TestEventSim:
+    def test_idle_window_advances_clock(self):
+        """An idle run (no events in the window) must still move the clock
+        to the horizon — regression for the old finalization that pinned
+        ``now`` at the last processed event whenever events remained past
+        the horizon."""
+        sim = EventSim()
+        fired = []
+        sim.at(100.0, fired.append, "late")
+        assert sim.run(until_ns=50.0) == 0          # event is past horizon
+        assert sim.now == 50.0                      # ... clock still advances
+        assert sim.run(until_ns=30.0) == 0
+        assert sim.now == 50.0                      # never goes backwards
+        assert sim.run(until_ns=1000.0) == 1
+        assert fired == ["late"]
+        assert sim.now == 1000.0
+
+    def test_empty_sim_advances_to_horizon(self):
+        sim = EventSim()
+        assert sim.run(until_ns=200.0) == 0
+        assert sim.now == 200.0
+
+    def test_infinite_horizon_stops_at_last_event(self):
+        sim = EventSim()
+        sim.at(7.0, lambda: None)
+        sim.run()                                   # until_ns=inf drains all
+        assert sim.now == 7.0                       # ... and stays finite
+
+    def test_max_events_budget_leaves_clock_at_last_processed(self):
+        """Exiting on the event budget must not advance the clock to an
+        event that was never processed."""
+        sim = EventSim()
+        for t in (10.0, 20.0, 30.0):
+            sim.at(t, lambda: None)
+        assert sim.run(until_ns=100.0, max_events=1) == 1
+        assert sim.now == 10.0
+        assert sim.run(until_ns=100.0) == 2         # drain the rest
+        assert sim.now == 100.0
+
+
 # ==================================================================== DRF ====
 class TestDRF:
     def test_classic_two_tenant(self):
