@@ -1,0 +1,325 @@
+"""Multi-tenant isolation benchmark: aggressor vs victims through the fair
+chain scheduler, on the sim and compute substrates.
+
+For each tenant count in {1, 2, 4}: tenant 0 is the **aggressor** (offers
+several times its fair share), the others are **victims** (each offers about
+its fair share).  A fair platform gives every victim its demand and the
+aggressor whatever is left, keeps victim latency bounded, and — with weights
+— splits capacity in the weight ratio.  Reported per config:
+
+  - per-tenant Gbps (sim: served wire bytes over the window; compute: wire
+    bytes over the single-sync run window);
+  - **Jain's fairness index** over weight-normalized shares,
+    ``J = (sum x)^2 / (n * sum x^2)`` with ``x_i = served_i / weight_i``,
+    computed over the tenants' *contended* shares (sim: served Gbps when
+    everyone is backlogged; compute: service-order bytes in the first half
+    of the fair drain, where ordering is the fairness lever);
+  - **victim p99 latency** (sim: packet ns -> us; compute: inject->sync
+    batch latency in us).
+
+A weighted 2-tenant (2:1) entry checks the served ratio lands on the
+weights.  Writes ``BENCH_fairness.json`` at the repo root (alongside
+``BENCH_compute.json``) and returns a flat summary for ``benchmarks.run``.
+
+Modes: ``--smoke`` = tiny batches/windows, CI-friendly; ``--full`` = longer
+windows (default: full on TPU, smoke elsewhere — the sim substrate is
+backend-independent either way).
+
+CLI:  PYTHONPATH=src python -m benchmarks.bench_fairness [--smoke|--full]
+                                                         [--out PATH]
+Exit codes: 0 ok, 1 schema/fairness failure, 2 bad usage.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_OUT = REPO_ROOT / "BENCH_fairness.json"
+WIRE_BYTES_PER_PKT = (5 + 16) * 4           # headers + payload, u32
+
+
+def jain(shares: list[float]) -> float:
+    """Jain's fairness index in (0, 1]; 1.0 = perfectly fair."""
+    if not shares or all(s == 0 for s in shares):
+        return 1.0
+    n = len(shares)
+    return (sum(shares) ** 2) / (n * sum(s * s for s in shares))
+
+
+# ================================================================== sim ====
+def _sim_config(n_tenants: int, duration_ms: float,
+                weights: dict[str, float] | None = None) -> dict:
+    """Aggressor floods 3x the link; each victim offers its fair share."""
+    from repro.api import Platform, SimBackend, VPC_SPECS, nt
+    plat = Platform(SimBackend(), specs=VPC_SPECS)
+    names = [f"t{i}" for i in range(n_tenants)]
+    weights = weights or {t: 1.0 for t in names}
+    deps = {}
+    for t in names:
+        deps[t] = plat.tenant(t, weight=weights[t]).deploy(
+            nt("firewall") >> nt("nat"))
+    plat.backend.settle()
+    for i, t in enumerate(names):
+        # aggressor: 3x link rate; victims: ~their fair share of 100G
+        rate = 300.0 if i == 0 else 100.0 / max(n_tenants, 2)
+        deps[t].source("poisson", rate_gbps=rate, mean_bytes=1000,
+                       seed=10 + i, duration_ms=duration_ms)
+    plat.run(duration_ms=duration_ms)
+    rep = plat.report()
+    per_tenant = {
+        t: {"gbps": round(rep[t].gbps, 3), "weight": weights[t],
+            "offered_gbps": 300.0 if i == 0
+            else round(100.0 / max(n_tenants, 2), 1),
+            "p99_us": round(rep[t].p99_latency_us, 2),
+            "drops": rep[t].drops}
+        for i, t in enumerate(names)}
+    # contended fairness: only backlogged tenants (offer > grant) count
+    # toward Jain — a victim that got everything it asked for is satisfied,
+    # not shortchanged
+    contended = [rep[t].gbps / weights[t] for t in names
+                 if per_tenant[t]["drops"] > 0] or \
+                [rep[t].gbps / weights[t] for t in names]
+    victims = names[1:]
+    return {
+        "substrate": "sim", "n_tenants": n_tenants,
+        "aggressor": names[0], "per_tenant": per_tenant,
+        "total_gbps": round(rep.total_gbps, 3),
+        "jain": round(jain(contended), 4),
+        "victim_served_frac": round(
+            sum(rep[t].gbps for t in victims)
+            / max(sum(per_tenant[t]["offered_gbps"] for t in victims), 1e-9),
+            4) if victims else 1.0,
+        "victim_p99_us": round(
+            max(rep[t].p99_latency_us for t in victims), 2)
+            if victims else 0.0,
+    }
+
+
+# ============================================================== compute ====
+def _compute_config(n_tenants: int, batch: int, agg_batches: int,
+                    victim_batches: int,
+                    weights: dict[str, float] | None = None) -> dict:
+    """Aggressor queues agg_batches before any victim; the fair drain must
+    still interleave service in weight proportion."""
+    import jax
+    from repro.api import ComputeBackend, Platform, VPC_SPECS, nt
+    from repro.serving.vpc import make_packets, make_rules
+    import jax.numpy as jnp
+
+    params = {"firewall": {"rules": make_rules(16, seed=2)},
+              "nat": {"nat_ip": 0x0A000001},
+              "chacha20": {"key": jnp.arange(8, dtype=jnp.uint32) * 3 + 1,
+                           "nonce": jnp.arange(3, dtype=jnp.uint32) + 7}}
+    be = ComputeBackend(use_fused=False,
+                        quantum_bytes=batch * WIRE_BYTES_PER_PKT)
+    plat = Platform(be, specs=VPC_SPECS)
+    names = [f"t{i}" for i in range(n_tenants)]
+    weights = weights or {t: 1.0 for t in names}
+    deps = {t: plat.tenant(t, weight=weights[t]).deploy(
+        nt("firewall") >> nt("nat") >> nt("chacha20"), params=params)
+        for t in names}
+    h, p = make_packets(batch, seed=1)
+
+    def workload():
+        for _ in range(agg_batches):        # aggressor's backlog goes first
+            deps[names[0]].inject(headers=h, payload=p)
+        for t in names[1:]:
+            for _ in range(victim_batches):
+                deps[t].inject(headers=h, payload=p)
+        plat.run()
+
+    workload()                 # warmup: identical composition -> identical
+    be.reset_window()          # buckets, so the measured run hits jit cache
+    d0 = be.stats["dispatches"]
+    workload()
+    rep = plat.report()
+    # fairness lives in the *service order*: weight-normalized bytes each
+    # tenant got inside the first half of the fair drain
+    log = be.dispatch_log
+    half = sum(c for _, c in log) / 2
+    acc, prefix = 0.0, {t: 0.0 for t in names}
+    for t, cost in log:
+        if acc >= half:
+            break
+        prefix[t] += cost
+        acc += cost
+    # tenants with service still pending at the cut are the contended set
+    contended = [prefix[t] / weights[t] for t in names
+                 if prefix[t] < sum(c for tt, c in log if tt == t)] or \
+                list(prefix.values())
+    victims = names[1:]
+    per_tenant = {
+        t: {"gbps": round(rep[t].gbps, 4), "weight": weights[t],
+            "pkts": rep[t].pkts_done,
+            "prefix_bytes": prefix[t],
+            "mean_lat_us": round(rep[t].mean_latency_us, 1),
+            "p99_us": round(rep[t].p99_latency_us, 1)}
+        for t in names}
+    return {
+        "substrate": "compute", "n_tenants": n_tenants,
+        "backend": jax.default_backend(),
+        "aggressor": names[0], "per_tenant": per_tenant,
+        "batch": batch, "dispatches": be.stats["dispatches"] - d0,
+        "total_pkts_per_s": round(
+            rep.total_pkts / max(be._elapsed_s, 1e-9), 1),
+        "jain": round(jain(contended), 4),
+        "victim_p99_us": round(
+            max(rep[t].p99_latency_us for t in victims), 1)
+            if victims else 0.0,
+    }
+
+
+# ================================================================= bench ====
+def bench_fairness(smoke: bool | None = None,
+                   out_path: Path | str = DEFAULT_OUT) -> dict:
+    import jax
+    backend = jax.default_backend()
+    if smoke is None:
+        smoke = backend != "tpu"
+    dur_ms = 2.0 if smoke else 8.0
+    batch = 32 if smoke else 1024
+    agg_b, vic_b = (12, 4) if smoke else (48, 16)
+
+    configs = []
+    for n in (1, 2, 4):
+        configs.append(_sim_config(n, dur_ms))
+        configs.append(_compute_config(n, batch, agg_b, vic_b))
+    weighted = {
+        "sim": _sim_config(2, dur_ms, weights={"t0": 2.0, "t1": 1.0}),
+        "compute": _compute_config(2, batch, agg_b, agg_b,
+                                   weights={"t0": 2.0, "t1": 1.0}),
+    }
+    # weighted sim entry floods both tenants so the served ratio is the
+    # weight ratio (victim here offers 50G < its 2/3 share, so re-run with
+    # both flooding for the ratio check)
+    weighted["sim_ratio"] = _weighted_sim_ratio(dur_ms)
+
+    res = {
+        "bench": "bench_fairness",
+        "mode": "smoke" if smoke else "full",
+        "backend": backend,
+        "wire_bytes_per_pkt": WIRE_BYTES_PER_PKT,
+        "configs": configs,
+        "weighted_2tenant": weighted,
+        "note": ("Jain over weight-normalized contended shares; 1.0 = "
+                 "perfectly fair.  Sim Gbps are simulated-time wire "
+                 "throughput; compute latencies are inject->sync host "
+                 "time (absolute values meaningless off-TPU, shares and "
+                 "Jain are the binding signal)."),
+    }
+    Path(out_path).write_text(json.dumps(res, indent=1))
+    return res
+
+
+def _weighted_sim_ratio(dur_ms: float) -> dict:
+    """Both tenants flood at 3x the link under 2:1 weights: served ratio
+    must land on the weights (the test_sched acceptance scenario)."""
+    from repro.api import Platform, SimBackend, VPC_SPECS, nt
+    plat = Platform(SimBackend(), specs=VPC_SPECS)
+    d_h = plat.tenant("heavy", weight=2.0).deploy(nt("firewall") >> nt("nat"))
+    d_l = plat.tenant("light", weight=1.0).deploy(nt("firewall") >> nt("nat"))
+    plat.backend.settle()
+    d_h.source("poisson", rate_gbps=300.0, mean_bytes=1000, seed=1,
+               duration_ms=dur_ms)
+    d_l.source("poisson", rate_gbps=300.0, mean_bytes=1000, seed=2,
+               duration_ms=dur_ms)
+    plat.run(duration_ms=dur_ms)
+    rep = plat.report()
+    ratio = rep["heavy"].bytes_done / max(rep["light"].bytes_done, 1.0)
+    return {"heavy_gbps": round(rep["heavy"].gbps, 3),
+            "light_gbps": round(rep["light"].gbps, 3),
+            "served_ratio": round(ratio, 4), "target_ratio": 2.0}
+
+
+def check_schema(res: dict) -> list[str]:
+    """The contract CI enforces: shape, {1,2,4}-tenant coverage on both
+    substrates, Jain within tolerance, weighted ratio on the weights."""
+    errs = []
+    for k in ("bench", "mode", "backend", "configs", "weighted_2tenant"):
+        if k not in res:
+            errs.append(f"missing key {k!r}")
+    seen = {(c.get("substrate"), c.get("n_tenants"))
+            for c in res.get("configs", [])}
+    for sub in ("sim", "compute"):
+        for n in (1, 2, 4):
+            if (sub, n) not in seen:
+                errs.append(f"missing config {sub}/{n}-tenant")
+    for c in res.get("configs", []):
+        if not {"per_tenant", "jain", "victim_p99_us"} <= set(c):
+            errs.append(f"malformed config {c.get('substrate')}/"
+                        f"{c.get('n_tenants')}")
+            continue
+        for t, row in c["per_tenant"].items():
+            if "gbps" not in row or "weight" not in row:
+                errs.append(f"malformed per_tenant row {t} in "
+                            f"{c['substrate']}/{c['n_tenants']}")
+        if c["n_tenants"] > 1 and c["jain"] < 0.85:
+            errs.append(
+                f"{c['substrate']}/{c['n_tenants']}-tenant Jain "
+                f"{c['jain']} < 0.85: aggressor is starving victims")
+    ratio = res.get("weighted_2tenant", {}).get("sim_ratio", {})
+    if ratio and abs(ratio.get("served_ratio", 0.0) - 2.0) > 0.2:
+        errs.append(f"weighted sim served ratio {ratio.get('served_ratio')} "
+                    "not within 10% of the 2:1 weights")
+    return errs
+
+
+def bench_fairness_summary() -> dict:
+    """Entry for benchmarks.run: flat keys only."""
+    res = bench_fairness()
+    errs = check_schema(res)
+    if errs:
+        raise RuntimeError("; ".join(errs))
+    flat = {k: v for k, v in res.items() if not isinstance(v, (list, dict))}
+    for c in res["configs"]:
+        key = f"{c['substrate']}_n{c['n_tenants']}"
+        flat[f"{key}_jain"] = c["jain"]
+        flat[f"{key}_victim_p99_us"] = c["victim_p99_us"]
+        if c["substrate"] == "sim":
+            flat[f"{key}_total_gbps"] = c["total_gbps"]
+    flat["weighted_sim_served_ratio"] = \
+        res["weighted_2tenant"]["sim_ratio"]["served_ratio"]
+    return flat
+
+
+def main(argv=None) -> int:
+    args = list(argv if argv is not None else sys.argv[1:])
+    smoke: bool | None = None
+    out = DEFAULT_OUT
+    while args:
+        a = args.pop(0)
+        if a == "--smoke":
+            smoke = True
+        elif a == "--full":
+            smoke = False
+        elif a == "--out":
+            if not args:
+                print("--out needs a path")
+                return 2
+            out = Path(args.pop(0))
+        else:
+            print(f"unknown flag {a!r}; known: --smoke --full --out PATH")
+            return 2
+    t0 = time.time()
+    res = bench_fairness(smoke=smoke, out_path=out)
+    for c in res["configs"]:
+        print(f"bench_fairness,{c['substrate']}_n{c['n_tenants']}_jain,"
+              f"{c['jain']}")
+        print(f"bench_fairness,{c['substrate']}_n{c['n_tenants']}"
+              f"_victim_p99_us,{c['victim_p99_us']}")
+    print("bench_fairness,weighted_sim_served_ratio,"
+          f"{res['weighted_2tenant']['sim_ratio']['served_ratio']}")
+    print(f"bench_fairness,seconds,{round(time.time() - t0, 1)}")
+    print(f"bench_fairness,out,{out}")
+    errs = check_schema(res)
+    if errs:
+        print("FAIL: " + "; ".join(errs))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,93 @@
+"""Two tenants with 3:1 weights sharing the VPC chain on two substrates.
+
+The same Platform API carries the tenant weight to the fair chain scheduler
+(`core/sched/`) behind whichever backend is in front of it:
+
+  - **SimBackend**: both tenants flood the 100G link at 3x capacity; the
+    epoch-DRF ingress throttles converge the served Gbps to the 3:1 weights.
+  - **ComputeBackend**: the heavy tenant queues its whole backlog before the
+    light tenant injects anything, yet the WDRR drain interleaves dispatches
+    so the light tenant is served early in weight proportion — not after the
+    heavy tenant's entire queue.
+
+Run:  PYTHONPATH=src python examples/multi_tenant.py
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.api import ComputeBackend, Platform, SimBackend, VPC_SPECS, nt
+from repro.serving.vpc import make_packets, make_rules
+
+VPC = nt("firewall") >> nt("nat") >> nt("chacha20")
+WEIGHTS = {"heavy": 3.0, "light": 1.0}
+
+
+def on_sim() -> None:
+    print("=== SimBackend: 3:1 weights, both tenants flooding 3x the link")
+    plat = Platform(SimBackend(), specs=VPC_SPECS)
+    deps = {t: plat.tenant(t, weight=w).deploy(VPC)
+            for t, w in WEIGHTS.items()}
+    plat.backend.settle()                      # let pre-launch PR finish
+    for i, (t, dep) in enumerate(deps.items()):
+        dep.source("poisson", rate_gbps=300.0, mean_bytes=1000,
+                   seed=1 + i, duration_ms=4.0)
+    plat.run(duration_ms=4.0)
+    rep = plat.report()
+    total = rep.total_gbps
+    for t in WEIGHTS:
+        tr = rep[t]
+        print(f"  {t:6s} w={tr.extra['weight']:.0f}  {tr.gbps:6.2f} Gbps "
+              f"({100 * tr.gbps / total:5.1f}% share)  "
+              f"p99={tr.p99_latency_us:8.1f} us  drops={tr.drops}")
+    print(f"  served ratio heavy/light = "
+          f"{rep['heavy'].bytes_done / rep['light'].bytes_done:.2f} "
+          f"(weights say 3.00)\n")
+
+
+def on_compute() -> None:
+    print("=== ComputeBackend: heavy tenant queues 30 batches first, "
+          "light 10 after")
+    batch = 64
+    params = {"firewall": {"rules": make_rules(16, seed=2)},
+              "nat": {"nat_ip": 0x0A000001},
+              "chacha20": {"key": jnp.arange(8, dtype=jnp.uint32) * 3 + 1,
+                           "nonce": jnp.arange(3, dtype=jnp.uint32) + 7}}
+    be = ComputeBackend(quantum_bytes=batch * (5 + 16) * 4)
+    plat = Platform(be, specs=VPC_SPECS)
+    deps = {t: plat.tenant(t, weight=w).deploy(VPC, params=params)
+            for t, w in WEIGHTS.items()}
+    h, p = make_packets(batch, seed=3)
+    for _ in range(30):
+        deps["heavy"].inject(headers=h, payload=p)
+    for _ in range(10):
+        deps["light"].inject(headers=h, payload=p)
+    plat.run()
+    rep = plat.report()
+    # the fair drain order is where isolation shows: cumulative service
+    # shares after each quarter of the dispatch stream
+    log = be.dispatch_log
+    total = sum(c for _, c in log)
+    served = {t: 0.0 for t in WEIGHTS}
+    marks, acc = [0.25, 0.5, 0.75, 1.0], 0.0
+    print("  service-order share (heavy%) at drain quarters:", end=" ")
+    for t, cost in log:
+        served[t] += cost
+        acc += cost
+        while marks and acc >= marks[0] * total - 1e-9:
+            print(f"{100 * served['heavy'] / acc:.0f}%", end=" ")
+            marks.pop(0)
+    print("\n  (30/40 batches are heavy: FIFO would start at 100% and "
+          "starve light; WDRR holds ~75%)")
+    total_pkts = rep.total_pkts
+    for t in WEIGHTS:
+        tr = rep[t]
+        print(f"  {t:6s} w={tr.extra['weight']:.0f}  pkts={tr.pkts_done:5d}"
+              f" ({100 * tr.pkts_done / total_pkts:5.1f}% of run)  "
+              f"{tr.gbps:.3f} Gbps")
+    print()
+
+
+if __name__ == "__main__":
+    on_sim()
+    on_compute()

@@ -26,9 +26,20 @@ to the host runtime):
     ``ComputeNT`` that reduces *across* packets must mask with the
     ``state["valid"]`` row mask the runtime provides, or pad rows leak
     into its result.
-  - **Batch coalescing.**  Same-DAG, same-signature injects pending at
-    ``run()`` merge into one dispatch.  The ChaCha keystream counter is
-    per-packet *state* (``ctr``, synthesized at inject time), so merging
+  - **Scheduler-ordered batch composition.**  Pending injects live in
+    per-tenant :class:`repro.core.sched.FairScheduler` queues; ``run()``
+    drains them in weighted deficit-round-robin order (cost = wire bytes),
+    so a heavy tenant's backlog can no longer starve a light tenant within
+    a run — the light tenant's batches dispatch early in the device queue
+    in proportion to its weight.  Injects for unregistered tenants are an
+    error (a tenant's weight must exist before its traffic does).
+  - **Batch coalescing.**  *Consecutive* same-DAG, same-signature entries
+    of the fair drain order merge into one dispatch — a later batch may
+    never jump the fair queue just because it coalesces, so a
+    mixed-signature stream pays one dispatch per signature *run* (a
+    single tenant with one signature still collapses to one dispatch per
+    ``run()``).  The ChaCha keystream counter is per-packet *state*
+    (``ctr``, synthesized at inject time), so merging or reordering
     batches never changes any packet's ciphertext.
   - **One device sync per run().**  Every pending batch is dispatched
     asynchronously; a single ``block_until_ready`` at the end is the only
@@ -57,6 +68,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.nt import GBPS, NTDag, NTSpec
+from repro.core.sched import FairScheduler, SchedConfig
 from repro.kernels.vpc_datapath import vpc_datapath
 from repro.serving.vpc import chacha20_xor_jnp, firewall, nat_rewrite
 
@@ -246,7 +258,8 @@ class ComputeBackend:
     name = "compute"
 
     def __init__(self, nts: dict[str, ComputeNT] | None = None,
-                 use_fused: bool | None = None, donate: bool = True):
+                 use_fused: bool | None = None, donate: bool = True,
+                 quantum_bytes: float = 8 * 1500.0):
         self.nts = dict(BUILTIN_COMPUTE_NTS)
         self.nts.update(nts or {})
         # default: megakernels only where they compile (TPU).  Off-TPU the
@@ -259,11 +272,26 @@ class ComputeBackend:
         # caller-owned arrays are never donated
         self.donate = donate
         self.deployments: dict[int, _Deployment] = {}
-        self.tenants: dict[str, float] = {}
-        self._pending: list[tuple[int, dict]] = []
+        # fair time sharing of the dispatch stream: per-tenant queues served
+        # in WDRR order, cost = wire bytes (strict tenancy: injects for
+        # unregistered tenants raise)
+        # WDRR granularity: wire bytes of deficit earned per round per unit
+        # weight.  Default ~ one MTU-sized batch; set it near the typical
+        # batch wire size for the tightest inter-tenant interleave.
+        self.sched = FairScheduler(
+            config=SchedConfig(quantum=float(quantum_bytes), strict=True),
+            clock=time.perf_counter)
+        self._order = 0                    # global inject sequence number
+        #: (tenant, wire_bytes) per dispatched batch, in fair service order
+        self.dispatch_log: list[tuple[str, float]] = []
+        self._lat_s: dict[str, list[float]] = {}
         self._elapsed_s = 0.0
         self.stats = {"traces": 0, "dispatches": 0, "fused_dispatches": 0,
                       "batches": 0, "coalesced_batches": 0, "runs": 0}
+
+    @property
+    def tenants(self) -> dict[str, float]:
+        return self.sched.weights
 
     # ----------------------------------------------------------- protocol --
     def register(self, spec: NTSpec) -> None:
@@ -276,7 +304,7 @@ class ComputeBackend:
         self.nts[nt.name] = nt
 
     def add_tenant(self, tenant: str, weight: float) -> None:
-        self.tenants[tenant] = weight
+        self.sched.add_tenant(tenant, weight)
 
     # ------------------------------------------------------------ compile --
     def _validate(self, dag: NTDag) -> None:
@@ -364,11 +392,21 @@ class ComputeBackend:
 
     def inject(self, tenant: str, dag_uid: int, state: dict | None = None,
                **fields) -> None:
-        """Queue one packet batch.  ``state`` (or keyword fields) holds the
-        batch arrays, e.g. ``headers=(N, 5) u32, payload=(N, 16) u32``."""
+        """Queue one packet batch on the tenant's fair-scheduler queue.
+        ``state`` (or keyword fields) holds the batch arrays, e.g.
+        ``headers=(N, 5) u32, payload=(N, 16) u32``."""
         if dag_uid not in self.deployments:
             raise KeyError(f"DAG {dag_uid} not deployed")
+        if tenant not in self.sched.queues:
+            raise DagError(
+                f"tenant {tenant!r} is not registered; call "
+                "Platform.tenant(name, weight=...) (or add_tenant) before "
+                "injecting — its weight decides its fair share")
         dep = self.deployments[dag_uid]
+        if dep.dag.tenant != tenant:
+            raise DagError(
+                f"DAG {dag_uid} belongs to tenant {dep.dag.tenant!r}, not "
+                f"{tenant!r}")
         batch = dict(state or {})
         batch.update(fields)
         n = _rows(batch)
@@ -384,22 +422,49 @@ class ComputeBackend:
                     for k, v in nt.prep(
                             n, dep.params.get(name, {})).items():
                         batch.setdefault(k, v)
-        self._pending.append((dag_uid, batch))
+        wire = sum(v.size * v.dtype.itemsize for k, v in batch.items()
+                   if k in WIRE_FIELDS and hasattr(v, "dtype"))
+        self._order += 1
+        self.sched.submit(tenant, (self._order, dag_uid, batch),
+                          cost=float(wire) if wire else float(max(n, 1)))
         self.stats["batches"] += 1
+
+    def reset_window(self, keep_results: bool = False) -> None:
+        """Start a fresh measurement window (the compute analogue of
+        ``SimBackend.settle()``): clears the dispatch log and the latency
+        monitors, and — unless ``keep_results`` — the accumulated
+        per-deployment outputs together with the throughput window, so
+        ``report()`` spans only subsequent ``run()`` calls (e.g. after a
+        warmup pass that populated the jit caches).  With ``keep_results``
+        the elapsed window is kept too: Gbps is bytes-over-window, and the
+        two must cover the same runs."""
+        self.dispatch_log.clear()
+        self._lat_s.clear()
+        if not keep_results:
+            self._elapsed_s = 0.0
+            for dep in self.deployments.values():
+                dep.results.clear()
 
     # ---------------------------------------------------------------- run --
     def run(self, **_kw) -> None:
-        """Dispatch every pending batch asynchronously (coalescing same-DAG
-        same-signature injects), then synchronize with the device ONCE."""
+        """Drain the tenant queues in WDRR order, dispatch every batch
+        asynchronously (coalescing *consecutive* same-DAG same-signature
+        entries of the fair order), then synchronize with the device ONCE."""
         t0 = time.perf_counter()
-        groups: dict[tuple, list[tuple[int, dict]]] = {}
-        for order, (dag_uid, batch) in enumerate(self._pending):
-            groups.setdefault((dag_uid, _signature(batch)),
-                              []).append((order, batch))
-        self._pending.clear()
+        # fair service order: the whole pending set, interleaved by weight
+        groups: list[tuple[tuple, list]] = []
+        enq_at: dict[int, tuple[str, float]] = {}
+        for tenant, item in self.sched.drain():
+            order, dag_uid, batch = item.payload
+            self.dispatch_log.append((tenant, item.cost))
+            enq_at[order] = (tenant, item.enqueued_at)
+            key = (dag_uid, _signature(batch))
+            if not groups or groups[-1][0] != key:
+                groups.append((key, []))
+            groups[-1][1].append((order, batch))
 
         launched = []
-        for (dag_uid, _sig), entries in groups.items():
+        for (dag_uid, _sig), entries in groups:
             dep = self.deployments[dag_uid]
             orders = [order for order, _ in entries]
             batches = [batch for _, batch in entries]
@@ -427,8 +492,11 @@ class ComputeBackend:
                 self.stats["fused_dispatches"] += 1
 
         jax.block_until_ready([o for *_, o in launched])    # the ONE sync
-        self._elapsed_s += time.perf_counter() - t0
+        t_done = time.perf_counter()
+        self._elapsed_s += t_done - t0
         self.stats["runs"] += 1
+        for tenant, t_enq in enq_at.values():   # inject -> sync completion
+            self._lat_s.setdefault(tenant, []).append(t_done - t_enq)
 
         split = []                # un-coalesce, drop pad rows
         for dep, orders, sizes, out in launched:
@@ -453,6 +521,7 @@ class ComputeBackend:
                              duration_ns=self._elapsed_s * 1e9)
         rep.extra["compiles"] = self.stats["traces"]
         rep.extra.update(self.stats)
+        sched_mon = self.sched.snapshot()
         for dep in self.deployments.values():
             tenant = dep.dag.tenant
             tr = rep.tenants.setdefault(
@@ -470,6 +539,18 @@ class ComputeBackend:
                 tr.outputs.append(out)
             if self._elapsed_s > 0:
                 tr.gbps = tr.bytes_done * 8 / self._elapsed_s / 1e9
+        # scheduler-side accounting: weight, fair-served wire bytes, and
+        # inject->sync batch latencies
+        for tenant, tr in rep.tenants.items():
+            mon = sched_mon.get(tenant)
+            if mon is not None:
+                tr.extra["weight"] = mon["weight"]
+                tr.extra["sched_served_bytes"] = mon["served_cost"]
+            lats = sorted(self._lat_s.get(tenant, ()))
+            if lats:
+                tr.mean_latency_us = sum(lats) / len(lats) * 1e6
+                tr.p99_latency_us = lats[
+                    min(len(lats) - 1, int(0.99 * len(lats)))] * 1e6
         return rep
 
 

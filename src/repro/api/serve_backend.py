@@ -41,8 +41,7 @@ class ServeBackend:
                 f"available: {sorted(SERVE_SPECS)}")
 
     def add_tenant(self, tenant: str, weight: float) -> None:
-        self.engine.weights[tenant] = weight
-        self.engine.admission.weights[tenant] = weight
+        self.engine.add_tenant(tenant, weight)
 
     def deploy(self, dag: NTDag, **_kw) -> None:
         names = dag.all_nts()
@@ -86,6 +85,7 @@ class ServeBackend:
             tr.outputs.append(req)
             tr.extra["cached"] = tr.extra.get("cached", 0) + int(req.cached)
         for tr in rep.tenants.values():
+            tr.extra["weight"] = self.engine.weights.get(tr.tenant, 1.0)
             lats = [r.latency * 1e6 for r in tr.outputs]  # seconds -> us
             if lats:
                 tr.mean_latency_us = sum(lats) / len(lats)

@@ -61,7 +61,7 @@ class SimBackend:
     def add_tenant(self, tenant: str, weight: float) -> None:
         for s in self.snics:
             s.cfg.tenant_weights[tenant] = weight
-            s.admission.weights[tenant] = weight
+            s.sched.add_tenant(tenant, weight)
             s.stats.setdefault(tenant, FlowStats())
 
     def deploy(self, dag: NTDag, prelaunch: bool = True, snic: int = 0,
@@ -136,5 +136,7 @@ class SimBackend:
                 mean_latency_us=st.mean_latency_us(),
                 p99_latency_us=st.p99_us(),
                 gbps=st.gbps(dur))
+            rep.tenants[tenant].extra["weight"] = \
+                self.snic.sched.weights.get(tenant, 1.0)
         rep.extra["pr_count"] = sum(s.regions.pr_count for s in self.snics)
         return rep

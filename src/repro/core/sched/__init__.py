@@ -1,0 +1,35 @@
+"""Substrate-agnostic multi-tenant fair chain scheduler (paper §4.4).
+
+SuperNIC's management plane combines fair **space** sharing (epoch-driven,
+run-time-monitored DRF over every internal resource) with fair **time**
+sharing (the order in which queued work is actually served) of heterogeneous
+resources.  Before this package existed that logic was re-implemented, in
+three dialects, by every substrate that schedules real work; now it is one
+reusable subsystem:
+
+  - :mod:`queues`     — per-tenant ingress queues with byte/token credit
+                        accounting (token-bucket pacing, backlog caps,
+                        served/ drop monitors);
+  - :mod:`timeshare`  — weighted deficit round-robin service order;
+  - :mod:`spaceshare` — epoch-driven DRF grants built on
+                        :class:`repro.core.policy.DRFAdmission`;
+  - :mod:`scheduler`  — the :class:`FairScheduler` facade with pluggable
+                        ``Clock`` / ``Capacity`` / ``Scale`` hooks.
+
+The same :class:`FairScheduler` drives all three substrates:
+
+  =================  =======================  ============================
+  substrate          work unit / cost         time units (Clock hook)
+  =================  =======================  ============================
+  sNIC device model  packet / wire bytes      simulated ns (EventSim.now)
+  ComputeBackend     packet batch / bytes     host seconds (perf_counter)
+  serving Engine     request / tokens+pages   host seconds (time.time)
+  =================  =======================  ============================
+
+so any future substrate (the ROADMAP's sharding / multi-backend lane) gets
+tenancy by instantiating one object instead of re-deriving the paper's §4.4.
+"""
+from .queues import QueueItem, TenantQueue  # noqa: F401
+from .scheduler import Clock, FairScheduler, Scale, SchedConfig  # noqa: F401
+from .spaceshare import SpaceShare  # noqa: F401
+from .timeshare import DeficitRoundRobin  # noqa: F401

@@ -1,6 +1,11 @@
-"""The sNIC device model (§4): parser + rate limiter, packet store, central
-scheduler with chain-credit reservation, NT regions, fork/join sync buffer,
-run-time-monitored DRF control loop, and NT autoscaling.
+"""The sNIC device model (§4): datapath only — parser, packet store, central
+chain scheduler with credit reservation, NT regions, fork/join sync buffer.
+
+Everything management-plane (per-tenant ingress queues + token-bucket rate
+limits, epoch-driven DRF space sharing, instance autoscaling) lives in the
+substrate-agnostic :class:`repro.core.sched.FairScheduler`; this class wires
+it to the event clock and applies its decisions with device mechanisms
+(retry events, region PR launches).
 
 Two scheduling modes reproduce the paper's comparison:
   - ``mode="snic"``  : NT-chain scheduling — credits for the *whole* chain are
@@ -17,12 +22,12 @@ model).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 
 from .nt import ChainProgram, NTDag, NTInstance, NTSpec, Packet, enumerate_programs
-from .policy import DRFAdmission, UtilizationScaler
+from .policy import UtilizationScaler
 from .regions import LaunchResult, Region, RegionManager, RegionState
+from .sched import FairScheduler, SchedConfig, SpaceShare
 from .sim import GBPS, PAPER, EventSim, FlowStats
 from .vmem import VirtualMemory
 
@@ -84,15 +89,19 @@ class SNIC:
         self.remote_dags: dict[int, object] = {}   # dag_uid -> peer SNIC
         self.stats: dict[str, FlowStats] = {}
         self.pid = 0
-        # ingress: per-tenant token bucket + backlog queue
-        self.tokens: dict[str, float] = {}
-        self.token_rate: dict[str, float] = {}     # bytes/ns
-        self.token_last: dict[str, float] = {}
-        self.backlog: dict[str, list] = {}
-        self.backlog_bytes: dict[str, float] = {}
-        self.max_backlog_bytes = 4 << 20
-        # monitored demand per (tenant, resource) for DRF (policy component)
-        self.admission = DRFAdmission(cfg.tenant_weights)
+        # management plane: the shared fair scheduler (per-tenant paced
+        # ingress queues + epoch DRF + autoscale policy), on the sim clock.
+        # strict=False keeps the sNIC's open-world tenancy: traffic sources
+        # inject for tenants that never registered (weight defaults to 1).
+        self.sched = FairScheduler(
+            cfg.tenant_weights,
+            SchedConfig(quantum=1500.0, max_backlog=4 << 20,
+                        bucket_window=2 * cfg.epoch_ns,   # 2-epoch bucket
+                        min_retry=16.0,                   # >= 1 cycle
+                        max_retry=cfg.epoch_ns, strict=False),
+            clock=lambda: self.sim.now,
+            scale=UtilizationScaler(cfg.autoscale_hi, cfg.autoscale_lo,
+                                    dwell_ns=cfg.monitor_ns))
         # uplink/egress server
         self.uplink_busy_until = 0.0
         self.egress_bytes = 0.0
@@ -100,9 +109,6 @@ class SNIC:
         # per-NT waiters: instance -> list of (packet, region, slot, stage)
         self.waiters: dict[int, list] = {}
         self.forks: dict[int, _Fork] = {}
-        # autoscale policy: watermark + MONITOR_PERIOD hysteresis (§4.4)
-        self.scaler = UtilizationScaler(cfg.autoscale_hi, cfg.autoscale_lo,
-                                        dwell_ns=cfg.monitor_ns)
         # throughput timeline samples [(t, tenant, nt, bytes)]
         self.tput_log: list = []
         self.log_tput = False
@@ -175,53 +181,24 @@ class SNIC:
                      arrival_ns=self.sim.now)
         # offered-load monitoring happens BEFORE the rate limiter: "even if
         # there is no credit, we still capture the intended load" (§4.4)
-        self.admission.observe(tenant, "ingress", size_bytes)
+        self.sched.observe(tenant, "ingress", size_bytes)
         st = self.stats.setdefault(tenant, FlowStats())
-        q = self.backlog.setdefault(tenant, [])
-        qb = self.backlog_bytes.get(tenant, 0.0)
-        if qb + size_bytes > self.max_backlog_bytes:
-            st.drops += 1
+        if not self.sched.submit(tenant, pkt, size_bytes):
+            st.drops += 1                 # backlog cap: counted, not silent
             return
-        self.backlog_bytes[tenant] = qb + size_bytes
-        q.append(pkt)
-        if len(q) == 1:
-            self._drain(tenant)
+        if self.sched.queued(tenant) == 1:
+            self._pump(tenant)
 
-    def _refill(self, tenant: str) -> None:
-        rate = self.token_rate.get(tenant, math.inf)
-        if rate is math.inf:
-            self.tokens[tenant] = math.inf
+    def _pump(self, tenant: str) -> None:
+        """Serve the tenant's paced queue: parse on credit, retry on none."""
+        pkt, delay = self.sched.poll(tenant)
+        if pkt is None:
+            if delay is not None:         # head waiting for token credits
+                self.sim.after(delay, self._pump, tenant)
             return
-        last = self.token_last.get(tenant, self.sim.now)
-        cap = rate * self.cfg.epoch_ns * 2            # bucket depth: 2 epochs
-        self.tokens[tenant] = min(cap, self.tokens.get(tenant, 0.0)
-                                  + rate * (self.sim.now - last))
-        self.token_last[tenant] = self.sim.now
-
-    def _drain(self, tenant: str) -> None:
-        q = self.backlog.get(tenant, [])
-        if not q:
-            return
-        self._refill(tenant)
-        pkt = q[0]
-        # 1e-6-byte epsilon: float token accumulation can sit one ulp below
-        # the packet size forever (retry delay would round below the clock
-        # resolution and the simulation would spin at one timestamp)
-        if self.tokens.get(tenant, math.inf) >= pkt.size_bytes - 1e-6:
-            if self.tokens[tenant] != math.inf:
-                self.tokens[tenant] = max(
-                    0.0, self.tokens[tenant] - pkt.size_bytes)
-            q.pop(0)
-            self.backlog_bytes[tenant] -= pkt.size_bytes
-            self._parse(pkt)
-            if q:
-                self.sim.after(0.0, self._drain, tenant)
-        else:
-            rate = self.token_rate.get(tenant, 0.0)
-            need = pkt.size_bytes - self.tokens.get(tenant, 0.0)
-            delay = need / rate if rate > 0 else self.cfg.epoch_ns
-            delay = max(min(delay, self.cfg.epoch_ns), 16.0)  # >= 1 cycle
-            self.sim.after(delay, self._drain, tenant)
+        self._parse(pkt)
+        if self.sched.queued(tenant):
+            self.sim.after(0.0, self._pump, tenant)
 
     def _parse(self, pkt: Packet) -> None:
         """Parser + MAT routing (§4.1) after the ingress PHY/MAC."""
@@ -238,7 +215,7 @@ class SNIC:
                            self._egress, pkt)
             return
         self.store_bytes += pkt.size_bytes            # payload -> packet store
-        self.admission.observe(pkt.tenant, "store", pkt.size_bytes)
+        self.sched.observe(pkt.tenant, "store", pkt.size_bytes)
         self.sim.after(self.cfg.phy_ns + self.cfg.core_ns,
                        self._start_stage, pkt, 0)
 
@@ -277,7 +254,7 @@ class SNIC:
         for name in branch:
             inst = self._inst_in(region, name)
             inst.demand_bytes += pkt.size_bytes
-            self.admission.observe(pkt.tenant, f"nt:{name}", pkt.size_bytes)
+            self.sched.observe(pkt.tenant, f"nt:{name}", pkt.size_bytes)
         region.prelaunched = False
         region.last_used_ns = self.sim.now
         if self.cfg.mode == "panic":
@@ -465,7 +442,7 @@ class SNIC:
         rate = self.cfg.uplink_gbps * GBPS
         start = max(self.sim.now, self.uplink_busy_until)
         self.uplink_busy_until = start + pkt.size_bytes / rate
-        self.admission.observe(pkt.tenant, "egress", pkt.size_bytes)
+        self.sched.observe(pkt.tenant, "egress", pkt.size_bytes)
         self.sim.at(self.uplink_busy_until + self.cfg.phy_ns,
                     self._done, pkt)
 
@@ -479,34 +456,41 @@ class SNIC:
             self.done_hook(pkt)
 
     # ======================================================== control loop ====
-    def _epoch(self) -> None:
-        """Per-epoch DRF (§4.4): measured demands -> ingress rate limits."""
+    def _capacities(self) -> dict[str, float]:
+        """Per-epoch capacity vector: link, store, and every live NT."""
         caps = {"ingress": self.cfg.uplink_gbps * GBPS * self.cfg.epoch_ns,
                 "egress": self.cfg.uplink_gbps * GBPS * self.cfg.epoch_ns,
                 "store": float(self.cfg.pkt_store_bytes)}
         for name, insts in self.regions.by_name.items():
             caps[f"nt:{name}"] = sum(
                 i.spec.max_gbps for i in insts) * GBPS * self.cfg.epoch_ns
-        # standing backlog counts as ingress demand on top of the monitors
-        backlog = {t: {"ingress": qb}
-                   for t, qb in self.backlog_bytes.items() if qb > 0}
-        res = self.admission.allocate(caps, extra=backlog)
+        return caps
+
+    def _epoch(self) -> None:
+        """Per-epoch DRF (§4.4): measured demands -> ingress rate limits.
+        The scheduler solves; the device applies the grants after the
+        solver's 3 us runtime and re-pumps the paced queues."""
+        res = self.sched.epoch(
+            self._capacities(),
+            # standing backlog counts as ingress demand on top of the
+            # arrival monitors
+            extra=self.sched.backlog_demand("ingress"))
         if res is not None:
+            rates = SpaceShare.to_rates(
+                res, "ingress", self.cfg.epoch_ns,
+                headroom=self.cfg.ingress_headroom,
+                floor=self.cfg.ingress_floor_gbps * GBPS)
             apply_at = self.sim.now + self.cfg.drf_ns       # 3 us solver
-            for t in res.alloc:
-                grant = res.alloc[t].get("ingress", 0.0)
-                rate = max(grant * self.cfg.ingress_headroom / self.cfg.epoch_ns,
-                           self.cfg.ingress_floor_gbps * GBPS)
-                self.sim.at(apply_at, self._set_rate, t, rate)
+            for t, rate in rates.items():
+                self.sim.at(apply_at, self._apply_rate, t, rate)
         for insts in self.regions.by_name.values():
             for i in insts:
                 i.demand_bytes = 0.0
         self.sim.after(self.cfg.epoch_ns, self._epoch)
 
-    def _set_rate(self, tenant: str, rate: float) -> None:
-        self._refill(tenant)
-        self.token_rate[tenant] = rate
-        self._drain(tenant)
+    def _apply_rate(self, tenant: str, rate: float) -> None:
+        self.sched.set_rate(tenant, rate)
+        self._pump(tenant)
 
     # --------------------------------------------------------- autoscaling --
     def _monitor(self) -> None:
@@ -520,11 +504,11 @@ class SNIC:
                 continue
             cap = sum(i.spec.max_gbps for i in live) * GBPS * window
             served = sum(i.served_bytes for i in live)  # within the window
-            decision = self.scaler.decide(name, served, cap, self.sim.now,
-                                          n_instances=len(live))
-            if decision.direction > 0:
+            direction = self.sched.autoscale(name, served, cap,
+                                             n_instances=len(live))
+            if direction > 0:
                 self._scale_out(name)
-            elif decision.direction < 0:
+            elif direction < 0:
                 self._scale_down(name)
             for i in insts:
                 i.served_bytes = 0.0

@@ -14,21 +14,26 @@ Mapping of the paper's mechanisms onto the serving runtime:
   NT auto-scaling               | growing/shrinking the decode batch shape
   paged virtual memory (vmem)   | KV slot/page accounting + host swap-out
 
-The engine is single-process (CPU tests use tiny configs) but every policy
-decision routes through ``repro.core`` so the exact code that reproduces the
-paper's figures schedules real model computation here.
+All multi-tenant policy — per-tenant request queues, epoch DRF over the
+(tokens, pages) resource vector, WDRR admission order, the work-conserving
+fallback — lives in the shared :class:`repro.core.sched.FairScheduler`; the
+engine keeps only the serving mechanism (compiles, KV paging, model steps).
+Admission order is deterministic but weight/deficit-based: tenant *names*
+never order anything (the old private ``_admit`` used ``sorted(queues)``,
+an alphabetical bias this refactor deletes).
 """
 from __future__ import annotations
 
 import time
-from collections import OrderedDict, deque
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import DRFAdmission, StepScaler
+from repro.core.policy import StepScaler
+from repro.core.sched import FairScheduler, SchedConfig, SpaceShare
 from repro.core.vmem import OutOfMemory, VirtualMemory
 from repro.models import model as MD
 
@@ -102,15 +107,20 @@ class Engine:
         self._prefill_fns: dict[int, object] = {}
         self.compile_log: list[tuple[str, int, float]] = []
         self.active_bs = min(ecfg.batch_sizes)
-        # --- request plumbing
-        self.queues: dict[str, deque] = {}
-        self.weights = tenant_weights or {}
-        self.admitted: dict[str, int] = {}
-        self.admission = DRFAdmission(self.weights)
+        # --- request plumbing: the shared fair scheduler owns the queues
+        # (cost = request tokens; costs vector = {tokens, pages} for DRF).
+        # strict=False: submit() auto-registers unknown tenants at weight 1,
+        # the open tenancy the engine always had.
+        # quantum=1 token: finest-grain WDRR, so equal-weight tenants
+        # interleave per *request* inside one admission window instead of
+        # one tenant burst-filling it (the drain's round-jump keeps small
+        # quanta O(served items))
+        self.sched = FairScheduler(
+            tenant_weights, SchedConfig(quantum=1.0, strict=False),
+            clock=time.time)
         self.scaler = StepScaler(ecfg.batch_sizes,
                                  scale_up_ratio=ecfg.scale_up_backlog,
                                  scale_down_ratio=ecfg.scale_down_idle)
-        self.budget: dict[str, float] = {}
         self.done: list[Request] = []
         self.cache_nt = ResponseCacheNT(ecfg.cache_entries)
         self.rid = 0
@@ -147,65 +157,46 @@ class Engine:
                 {"embeds": jnp.zeros((bs, 1, self.cfg.d_model), jnp.float32)}
             self._get_fn("decode", bs)(self.params, cache, step, jnp.int32(8))
 
+    # ------------------------------------------------------------ tenancy --
+    def add_tenant(self, tenant: str, weight: float = 1.0) -> None:
+        self.sched.add_tenant(tenant, weight)
+
+    @property
+    def weights(self) -> dict[str, float]:
+        return self.sched.weights
+
+    def _costs(self, req: Request) -> dict[str, float]:
+        toks = len(req.prompt) + req.max_new
+        pages = (toks + self.ecfg.page_tokens - 1) // self.ecfg.page_tokens
+        return {"tokens": float(toks), "pages": float(pages)}
+
     # ------------------------------------------------------------ ingress --
     def submit(self, tenant: str, prompt: np.ndarray, max_new: int = 16):
         self.rid += 1
         req = Request(self.rid, tenant, np.asarray(prompt, np.int32),
                       max_new, t_submit=time.time())
-        self.queues.setdefault(tenant, deque()).append(req)
+        costs = self._costs(req)
+        self.sched.submit(tenant, req, cost=costs["tokens"], costs=costs)
         return req
 
     # ---------------------------------------------------------------- DRF --
-    def _run_drf(self):
-        """Monitored-demand DRF over (token-compute, kv-pages) per tenant.
-
-        The standing queue is the demand signal (like the sNIC's backlog
-        bytes): every queued request contributes its token and KV-page cost."""
-        backlog = {}
-        for t, q in self.queues.items():
-            if not q:
-                continue
-            toks = sum(len(r.prompt) + r.max_new for r in q)
-            pages = sum((len(r.prompt) + r.max_new + self.ecfg.page_tokens - 1)
-                        // self.ecfg.page_tokens for r in q)
-            backlog[t] = {"tokens": float(toks), "pages": float(pages)}
+    def _admit(self) -> list[Request]:
+        """One admission epoch via the fair scheduler: DRF over the
+        (tokens, pages) standing-backlog demand -> per-tenant token
+        budgets -> WDRR-ordered admission within budget (work-conserving:
+        if budgets admit nothing while work is queued — e.g. one request
+        alone exceeds the fair page share — the head of the first tenant
+        in WDRR order is admitted so the system always makes progress)."""
         caps = {"tokens": float(self.ecfg.epoch_requests * self.ecfg.max_len),
                 "pages": float(self.ecfg.mem_pages)}
         # a queued request keeps demanding until admitted, so the standing
         # backlog is the demand vector (the sNIC merges its arrival monitor
         # the same way; here every queued request is still an arrival)
-        res = self.admission.allocate(caps, extra=backlog)
-        if res is None:
-            return
-        for t in backlog:
-            self.budget[t] = res.alloc[t].get("tokens", 0.0)
-
-    def _admit(self) -> list[Request]:
-        """Ingress throttling: take requests round-robin within budget.
-        Work-conserving: if budgets admit nothing while work is queued
-        (e.g. one request alone exceeds the fair page share), admit the
-        head-of-line request so the system always makes progress."""
-        self._run_drf()
-        out = []
-        progress = True
-        while progress and len(out) < self.ecfg.epoch_requests:
-            progress = False
-            for t in sorted(self.queues):
-                q = self.queues[t]
-                if not q:
-                    continue
-                cost = len(q[0].prompt) + q[0].max_new
-                if self.budget.get(t, 0.0) >= cost:
-                    self.budget[t] -= cost
-                    out.append(q.popleft())
-                    progress = True
-        if not out:
-            for t in sorted(self.queues, key=lambda t: (
-                    self.queues[t][0].t_submit if self.queues[t] else 1e30)):
-                if self.queues[t]:
-                    out.append(self.queues[t].popleft())
-                    break
-        return out
+        res = self.sched.epoch(caps, extra=self.sched.backlog_demand())
+        budgets = SpaceShare.budgets(res, "tokens") if res is not None else {}
+        admitted = self.sched.admit(budgets,
+                                    limit=self.ecfg.epoch_requests)
+        return [item.payload for _, item in admitted]
 
     # ------------------------------------------------------------- engine --
     def _autoscale(self, backlog: int):
@@ -244,8 +235,9 @@ class Engine:
             elif self._alloc_pages(r):
                 todo.append(r)
             else:                                    # no KV memory: requeue
-                self.queues[r.tenant].appendleft(r)
-        backlog = sum(len(q) for q in self.queues.values()) + len(todo)
+                costs = self._costs(r)
+                self.sched.requeue(r.tenant, r, costs["tokens"], costs)
+        backlog = self.sched.pending() + len(todo)
         self._autoscale(backlog)
 
         # prefill + decode in groups of the active batch shape
@@ -291,7 +283,7 @@ class Engine:
 
     def run_until_drained(self, max_iters: int = 1000):
         for _ in range(max_iters):
-            if not any(self.queues.values()):
+            if not self.sched.pending():
                 break
             self.step()
         return self.done

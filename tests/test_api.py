@@ -272,5 +272,6 @@ class TestCrossSubstrate:
         plat = Platform(SimBackend(), specs=VPC_SPECS)
         plat.tenant("heavy", weight=3.0)
         snic = plat.backend.snic
-        assert snic.admission.weights["heavy"] == 3.0
+        assert snic.sched.weights["heavy"] == 3.0
+        assert snic.sched.space.weights["heavy"] == 3.0
         assert snic.cfg.tenant_weights["heavy"] == 3.0

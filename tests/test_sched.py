@@ -1,0 +1,492 @@
+"""The substrate-agnostic fair chain scheduler (ISSUE 3 acceptance surface).
+
+Unit layers: TenantQueue credit accounting, WDRR service order, FairScheduler
+admission/epoch/scaling hooks, and the core/policy.py scaler state machines.
+
+Acceptance: (a) WDRR service shares converge to tenant weights within 5% in
+a 2-tenant aggressor scenario on BOTH the sim and compute substrates;
+(b) the PR-2 megakernel stays bit-exact under scheduler-ordered batching;
+plus the satellite regressions — tenant *name* ordering can never change
+admission outcomes, and compute injects for unregistered tenants error.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.policy import StepScaler, UtilizationScaler
+from repro.core.sched import (DeficitRoundRobin, FairScheduler, SchedConfig,
+                              TenantQueue)
+from repro.api import (ComputeBackend, DagError, Platform, SimBackend,
+                       VPC_SPECS, nt)
+
+
+# ============================================================ TenantQueue ====
+class TestTenantQueue:
+    def test_backlog_cap_drops_counted(self):
+        q = TenantQueue("t", max_backlog=100.0)
+        assert q.push("a", 60.0) and q.push("b", 40.0)
+        assert not q.push("c", 1.0)            # over cap: dropped
+        assert q.drops == 1 and len(q) == 2
+        assert q.backlog_cost == 100.0
+
+    def test_pop_accounts_service(self):
+        q = TenantQueue("t")
+        q.push("a", 10.0), q.push("b", 20.0)
+        item = q.pop()
+        assert item.payload == "a"
+        assert q.served_cost == 10.0 and q.served_items == 1
+        assert q.backlog_cost == 20.0
+
+    def test_unpaced_queue_always_ready(self):
+        q = TenantQueue("t")
+        q.push("a", 1e12)
+        assert q.ready(now=0.0)                # rate=inf: no gating
+
+    def test_token_bucket_paces_and_retry_clamps(self):
+        q = TenantQueue("t", bucket_window=2.0, min_retry=1.0,
+                        max_retry=1000.0)
+        q.push("a", 20.0), q.push("b", 15.0)
+        q.set_rate(10.0, now=0.0)   # pacing starts with one full bucket (20)
+        assert q.ready(now=0.0)
+        q.pop(), q.spend(20.0)                 # bucket drained to 0
+        assert not q.ready(now=0.0)
+        # head "b" needs 15 units at rate 10 -> 1.5 time units
+        assert q.retry_delay(now=0.0) == pytest.approx(1.5, rel=0.01)
+        assert q.ready(now=1.5)
+        # a micro-need still clamps up to min_retry (no sub-cycle retries)
+        q.tokens = 14.999999
+        q.last_refill = 0.0
+        q.rate = 1e-9
+        assert q.retry_delay(now=0.0) == pytest.approx(1.0)  # min clamp
+        q.rate = 0.0
+        assert q.retry_delay(now=0.0) == 1000.0              # max clamp
+
+    def test_oversized_head_departs_on_a_full_bucket(self):
+        """An item larger than the whole bucket must not park the queue
+        forever: it leaves once the bucket is full (burst semantics)."""
+        q = TenantQueue("t", bucket_window=2.0)
+        q.push("big", 1000.0)                  # bucket depth is only 20
+        q.set_rate(10.0, now=0.0)
+        assert q.ready(now=0.0)                # full bucket -> departs
+
+    def test_set_rate_credits_elapsed_at_old_rate(self):
+        q = TenantQueue("t", bucket_window=100.0)
+        q.push("a", 50.0)
+        q.set_rate(10.0, now=0.0)
+        q.tokens = 0.0                         # drained bucket
+        q.set_rate(0.001, now=5.0)             # 5 time units at rate 10 = 50
+        assert q.tokens == pytest.approx(50.0)
+        assert q.ready(now=5.0)
+
+    def test_backlog_costs_vector(self):
+        q = TenantQueue("t")
+        q.push("a", 10.0, costs={"tokens": 10.0, "pages": 2.0})
+        q.push("b", 5.0)                       # scalar-only item
+        vec = q.backlog_costs()
+        assert vec == {"tokens": 10.0, "pages": 2.0, "cost": 5.0}
+
+
+# ===================================================== DeficitRoundRobin ====
+class TestWDRR:
+    def _queues(self, spec):
+        """spec: [(name, weight, [costs...])] in registration order."""
+        out = {}
+        for name, w, costs in spec:
+            q = TenantQueue(name, weight=w)
+            for i, c in enumerate(costs):
+                q.push(f"{name}{i}", c)
+            out[name] = q
+        return out
+
+    def test_equal_weights_interleave(self):
+        qs = self._queues([("a", 1.0, [10.0] * 4), ("b", 1.0, [10.0] * 4)])
+        order = [t for t, _ in DeficitRoundRobin(10.0).drain(qs)]
+        assert order == ["a", "b"] * 4
+
+    def test_weighted_shares_with_unequal_item_sizes(self):
+        """3:1 weights, different item sizes: served-cost shares converge to
+        the weight ratio within 5% over any sizeable prefix."""
+        qs = self._queues([("heavy", 3.0, [1500.0] * 120),
+                           ("light", 1.0, [700.0] * 120)])
+        served = {"heavy": 0.0, "light": 0.0}
+        seen = 0
+        for t, item in DeficitRoundRobin(1500.0).drain(qs):
+            served[t] += item.cost
+            seen += 1
+            if served["light"] >= 0.25 * 120 * 700.0:   # mid-drain prefix
+                break
+        ratio = served["heavy"] / served["light"]
+        assert ratio == pytest.approx(3.0, rel=0.05), ratio
+
+    def test_empty_queue_forfeits_deficit(self):
+        qs = self._queues([("a", 1.0, [10.0])])
+        list(DeficitRoundRobin(100.0).drain(qs))
+        assert qs["a"].deficit == 0.0          # no hoarding while idle
+
+    def test_gate_parks_queue_without_consuming(self):
+        qs = self._queues([("a", 1.0, [10.0] * 3), ("b", 1.0, [10.0] * 3)])
+        out = list(DeficitRoundRobin(10.0).drain(
+            qs, gate=lambda q, item: q.name != "a"))
+        assert [t for t, _ in out] == ["b"] * 3
+        assert len(qs["a"]) == 3               # parked, untouched
+
+    def test_stop_ends_drain_early(self):
+        qs = self._queues([("a", 1.0, [10.0] * 5)])
+        out = []
+        for t, item in DeficitRoundRobin(10.0).drain(
+                qs, stop=lambda: len(out) >= 2):
+            out.append(item)
+        assert len(out) == 2 and len(qs["a"]) == 3
+
+    def test_huge_head_cost_terminates_via_round_jump(self):
+        """A head far above the quantum must not spin empty rounds."""
+        qs = self._queues([("a", 1.0, [1e6]), ("b", 1.0, [1.0])])
+        out = [t for t, _ in DeficitRoundRobin(1.0).drain(qs)]
+        assert set(out) == {"a", "b"}
+
+    def test_weight_zero_tenant_is_best_effort_not_a_crash(self):
+        """weight=0 must not ZeroDivisionError the drain; the tenant is
+        served last (best-effort), after every weighted queue."""
+        qs = self._queues([("free", 0.0, [10.0] * 2),
+                           ("paid", 1.0, [10.0] * 2)])
+        out = [t for t, _ in DeficitRoundRobin(10.0).drain(qs)]
+        assert out == ["paid", "paid", "free", "free"]
+
+    def test_non_positive_quantum_rejected(self):
+        with pytest.raises(ValueError, match="quantum"):
+            DeficitRoundRobin(0.0)
+
+
+# ========================================================= FairScheduler ====
+class TestFairScheduler:
+    def test_strict_rejects_unknown_tenant(self):
+        s = FairScheduler(config=SchedConfig(strict=True))
+        with pytest.raises(KeyError, match="not registered"):
+            s.submit("ghost", "x", 1.0)
+
+    def test_open_mode_auto_registers_at_weight_one(self):
+        s = FairScheduler(config=SchedConfig(strict=False))
+        assert s.submit("new", "x", 1.0)
+        assert s.weights["new"] == 1.0 and s.pending() == 1
+
+    def test_admit_respects_budgets_in_wdrr_order(self):
+        s = FairScheduler({"a": 1.0, "b": 1.0},
+                          SchedConfig(quantum=1.0))
+        for i in range(3):
+            s.submit("a", f"a{i}", 10.0)
+            s.submit("b", f"b{i}", 10.0)
+        out = s.admit({"a": 20.0, "b": 10.0})
+        assert [t for t, _ in out] == ["a", "b", "a"]
+        assert s.queued("a") == 1 and s.queued("b") == 2
+
+    def test_admit_work_conserving_fallback(self):
+        """Budgets that admit nothing must still make progress, picking by
+        WDRR ring order (registration), never by name."""
+        s = FairScheduler(config=SchedConfig(quantum=1.0, strict=False))
+        s.submit("zzz", "z0", 100.0)           # registered first
+        s.submit("aaa", "a0", 100.0)
+        out = s.admit({"zzz": 1.0, "aaa": 1.0})     # budgets too small
+        assert len(out) == 1
+        assert out[0][0] == "zzz"              # ring order, not alphabetical
+
+    def test_admit_limit(self):
+        s = FairScheduler({"a": 1.0}, SchedConfig(quantum=1.0))
+        for i in range(5):
+            s.submit("a", i, 1.0)
+        assert len(s.admit({"a": 100.0}, limit=2)) == 2
+
+    def test_epoch_uses_capacity_hook(self):
+        s = FairScheduler({"a": 1.0},
+                          capacity=lambda: {"bw": 100.0})
+        s.observe("a", "bw", 50.0)
+        res = s.epoch()
+        assert res.alloc["a"]["bw"] == pytest.approx(50.0)
+        with pytest.raises(ValueError, match="Capacity"):
+            FairScheduler({"a": 1.0}).epoch()
+
+    def test_backlog_demand_scalar_and_vector(self):
+        s = FairScheduler({"a": 1.0}, SchedConfig(quantum=1.0))
+        s.submit("a", "x", 7.0, costs={"tokens": 7.0, "pages": 1.0})
+        assert s.backlog_demand("ingress") == {"a": {"ingress": 7.0}}
+        assert s.backlog_demand() == {"a": {"tokens": 7.0, "pages": 1.0}}
+
+    def test_poll_paces_by_rate(self):
+        now = {"t": 0.0}
+        s = FairScheduler({"a": 1.0},
+                          SchedConfig(bucket_window=2.0, min_retry=1.0,
+                                      max_retry=50.0),
+                          clock=lambda: now["t"])
+        s.submit("a", "pkt1", 15.0)
+        s.submit("a", "pkt2", 15.0)
+        s.set_rate("a", 10.0)                  # full bucket: 20 credits
+        payload, delay = s.poll("a")
+        assert payload == "pkt1" and delay == 0.0
+        payload, delay = s.poll("a")           # 5 credits left < 15
+        assert payload is None and 1.0 <= delay <= 50.0
+        now["t"] = 2.0                         # +20 credits
+        payload, delay = s.poll("a")
+        assert payload == "pkt2" and delay == 0.0
+        assert s.poll("a") == (None, None)     # empty
+
+    def test_autoscale_via_scale_hook(self):
+        s = FairScheduler({"a": 1.0},
+                          clock=lambda: 1e9,
+                          scale=UtilizationScaler(hi=0.9, lo=0.1,
+                                                  dwell_ns=0.0))
+        assert s.autoscale("nt", served=95.0, capacity=100.0,
+                           n_instances=1) == 0          # arming
+        assert s.autoscale("nt", served=95.0, capacity=100.0,
+                           n_instances=1) == 1
+        assert FairScheduler().autoscale("nt", 1.0, 1.0, 1) == 0  # no hook
+
+    def test_requeue_reverses_service_accounting(self):
+        """An admitted-then-requeued item (e.g. OOM) was not served: the
+        deficit charge and served monitors must be reversed, or every
+        retry would erode the tenant's real time share."""
+        s = FairScheduler({"a": 1.0}, SchedConfig(quantum=1.0))
+        s.submit("a", "req", 10.0)
+        for _ in range(3):                     # admit + fail + retry x3
+            [(t, item)] = s.admit({"a": 100.0})
+            s.requeue(t, item.payload, item.cost, item.costs)
+        snap = s.snapshot()["a"]
+        assert snap["served_items"] == 0.0 and snap["served_cost"] == 0.0
+        assert snap["queued"] == 1.0
+        [(t, item)] = s.admit({"a": 100.0})    # finally served
+        assert s.snapshot()["a"]["served_items"] == 1.0
+
+    def test_snapshot_monitors(self):
+        s = FairScheduler({"a": 2.0}, SchedConfig(quantum=1.0))
+        s.submit("a", "x", 5.0)
+        s.admit({"a": 10.0})
+        snap = s.snapshot()["a"]
+        assert snap["weight"] == 2.0
+        assert snap["served_cost"] == 5.0 and snap["served_items"] == 1
+        assert snap["queued"] == 0.0
+
+
+# ================================================== policy.py scalers =======
+class TestScalerBoundaries:
+    """Satellite: dwell/hysteresis boundary coverage for core/policy.py."""
+
+    def test_utilization_exactly_at_hi_arms(self):
+        sc = UtilizationScaler(hi=0.9, lo=0.2, dwell_ns=100.0)
+        # util == hi exactly counts as overload (>=), starts the dwell timer
+        assert sc.decide("x", 90.0, 100.0, 0.0, 1).direction == 0
+        assert sc.decide("x", 90.0, 100.0, 100.0, 1).direction == 1
+
+    def test_utilization_exactly_at_lo_arms(self):
+        sc = UtilizationScaler(hi=0.9, lo=0.2, dwell_ns=100.0)
+        # util == lo exactly counts as underload (<=)
+        assert sc.decide("x", 20.0, 100.0, 0.0, 2).direction == 0
+        assert sc.decide("x", 20.0, 100.0, 100.0, 2).direction == -1
+
+    def test_redecide_inside_dwell_window_holds(self):
+        sc = UtilizationScaler(hi=0.9, lo=0.2, dwell_ns=100.0)
+        sc.decide("x", 95.0, 100.0, 0.0, 1)
+        for t in (10.0, 50.0, 99.0):           # inside the window: no fire
+            assert sc.decide("x", 95.0, 100.0, t, 1).direction == 0
+        assert sc.decide("x", 95.0, 100.0, 100.0, 1).direction == 1
+
+    def test_fire_rearms_the_dwell_timer(self):
+        sc = UtilizationScaler(hi=0.9, lo=0.2, dwell_ns=100.0)
+        sc.decide("x", 95.0, 100.0, 0.0, 1)
+        assert sc.decide("x", 95.0, 100.0, 150.0, 1).direction == 1
+        # immediately after firing the timer restarts: no double fire
+        assert sc.decide("x", 95.0, 100.0, 160.0, 1).direction == 0
+        assert sc.decide("x", 95.0, 100.0, 260.0, 1).direction == 1
+
+    def test_between_watermarks_disarms_both(self):
+        sc = UtilizationScaler(hi=0.9, lo=0.2, dwell_ns=100.0)
+        sc.decide("x", 95.0, 100.0, 0.0, 2)
+        sc.decide("x", 10.0, 100.0, 10.0, 2)
+        sc.decide("x", 50.0, 100.0, 20.0, 2)   # mid-band: both timers reset
+        assert sc.decide("x", 95.0, 100.0, 30.0, 2).direction == 0
+        assert sc.decide("x", 10.0, 100.0, 40.0, 2).direction == 0
+
+    def test_scale_in_needs_multiple_instances(self):
+        sc = UtilizationScaler(hi=0.9, lo=0.2, dwell_ns=0.0)
+        sc.decide("x", 0.0, 100.0, 0.0, 1)
+        assert sc.decide("x", 0.0, 100.0, 1.0, 1).direction == 0
+        sc.decide("x", 0.0, 100.0, 2.0, 2)
+        assert sc.decide("x", 0.0, 100.0, 3.0, 2).direction == -1
+
+    def test_step_scaler_clamps_at_ladder_ends(self):
+        sc = StepScaler((1, 2, 4, 8), scale_up_ratio=2.0,
+                        scale_down_ratio=0.25)
+        assert sc.decide(8, 1e9) == 8          # top clamp
+        assert sc.decide(1, 0.0) == 1          # bottom clamp
+        assert sc.decide(8, 0.0) == 4          # one rung at a time
+        assert sc.decide(1, 1e9) == 2
+
+    def test_step_scaler_thresholds_are_exclusive(self):
+        sc = StepScaler((2, 4), scale_up_ratio=2.0, scale_down_ratio=0.5)
+        assert sc.decide(2, 4.0) == 2          # backlog == up-threshold holds
+        assert sc.decide(4, 2.0) == 4          # backlog == down-threshold holds
+        assert sc.decide(2, 4.1) == 4
+        assert sc.decide(4, 1.9) == 2
+
+
+# ======================================= acceptance: sim substrate shares ====
+class TestSimSubstrateFairness:
+    def test_wdrr_drf_shares_converge_to_weights(self):
+        """2-tenant aggressor scenario: both offer 3x the link; DRF ingress
+        throttles converge the served-byte ratio to the 2:1 weights within
+        5% (paper §4.4 fair space sharing on the event-driven substrate)."""
+        plat = Platform(SimBackend(), specs=VPC_SPECS)
+        heavy = plat.tenant("heavy", weight=2.0)
+        light = plat.tenant("light", weight=1.0)
+        d_h = heavy.deploy(nt("firewall") >> nt("nat"))
+        d_l = light.deploy(nt("firewall") >> nt("nat"))
+        plat.backend.settle()
+        d_h.source("poisson", rate_gbps=300.0, mean_bytes=1000, seed=1,
+                   duration_ms=4.0)
+        d_l.source("poisson", rate_gbps=300.0, mean_bytes=1000, seed=2,
+                   duration_ms=4.0)
+        plat.run(duration_ms=4.0)
+        rep = plat.report()
+        ratio = rep["heavy"].bytes_done / rep["light"].bytes_done
+        assert ratio == pytest.approx(2.0, rel=0.05), ratio
+        # aggressor pressure was real: both tenants saw ingress drops
+        assert rep["heavy"].drops > 0 and rep["light"].drops > 0
+        assert rep["heavy"].extra["weight"] == 2.0
+
+
+# =================================== acceptance: compute substrate shares ====
+class TestComputeSubstrateFairness:
+    def _mk_params(self):
+        import jax.numpy as jnp
+        from repro.serving.vpc import make_rules
+        return {"firewall": {"rules": make_rules(8, seed=2)},
+                "nat": {"nat_ip": 0x0A000001},
+                "chacha20": {"key": jnp.arange(8, dtype=jnp.uint32) * 3 + 1,
+                             "nonce": jnp.arange(3, dtype=jnp.uint32) + 7}}
+
+    def test_dispatch_order_shares_converge_to_weights(self):
+        """Aggressor (weight 3) and victim (weight 1) each queue 32 equal
+        batches; the fair drain interleaves dispatches so every sizeable
+        prefix of the service order carries ~3:1 bytes (within 5%) — the
+        victim no longer waits behind the aggressor's whole backlog."""
+        from repro.serving.vpc import make_packets
+        params = self._mk_params()
+        # quantum == one batch's wire bytes -> per-round service is exactly
+        # weight-proportional in whole batches
+        plat = Platform(ComputeBackend(use_fused=False,
+                                       quantum_bytes=64 * (5 + 16) * 4),
+                        specs=VPC_SPECS)
+        agg = plat.tenant("agg", weight=3.0)
+        vic = plat.tenant("vic", weight=1.0)
+        d_a = agg.deploy(nt("firewall") >> nt("nat") >> nt("chacha20"),
+                         params=params)
+        d_v = vic.deploy(nt("firewall") >> nt("nat") >> nt("chacha20"),
+                         params=params)
+        h, p = make_packets(64, seed=1)
+        for _ in range(32):                    # aggressor queues first
+            d_a.inject(headers=h, payload=p)
+        for _ in range(32):
+            d_v.inject(headers=h, payload=p)
+        plat.run()
+        log = plat.backend.dispatch_log
+        assert len(log) == 64
+        # mid-drain prefix: until the victim has a quarter of its bytes
+        served = {"agg": 0.0, "vic": 0.0}
+        vic_total = sum(c for t, c in log if t == "vic")
+        for t, cost in log:
+            served[t] += cost
+            if served["vic"] >= 0.25 * vic_total:
+                break
+        ratio = served["agg"] / served["vic"]
+        assert ratio == pytest.approx(3.0, rel=0.05), ratio
+        rep = plat.report()
+        assert rep["agg"].extra["weight"] == 3.0
+        assert rep["vic"].pkts_done == 32 * 64
+        assert rep["vic"].p99_latency_us > 0
+
+    def test_unregistered_tenant_inject_errors(self):
+        """Satellite: weights can no longer be silently dropped — traffic
+        for a tenant nobody registered is an error, not FIFO'd in."""
+        be = ComputeBackend(use_fused=False)
+        plat = Platform(be, specs=VPC_SPECS)
+        dep = plat.tenant("alice").deploy(
+            nt("firewall") >> nt("nat") >> nt("chacha20"),
+            params=self._mk_params())
+        from repro.serving.vpc import make_packets
+        h, p = make_packets(8, seed=1)
+        with pytest.raises(DagError, match="not registered"):
+            be.inject("mallory", dep.uid, headers=h, payload=p)
+        with pytest.raises(DagError, match="belongs to"):
+            plat.tenant("bob")
+            be.inject("bob", dep.uid, headers=h, payload=p)
+
+    def test_megakernel_bit_exact_under_scheduler_ordering(self):
+        """Acceptance (b): PR-2 fused-megakernel results are bit-exact vs
+        vpc_chain when batches flow through WDRR-ordered, coalesced
+        dispatch across two weighted tenants."""
+        import jax.numpy as jnp
+        from repro.serving.vpc import make_packets, vpc_chain
+        params = self._mk_params()
+        rules = params["firewall"]["rules"]
+        key, nonce = params["chacha20"]["key"], params["chacha20"]["nonce"]
+        plat = Platform(ComputeBackend(use_fused=True), specs=VPC_SPECS)
+        d_a = plat.tenant("a", weight=3.0).deploy(
+            nt("firewall") >> nt("nat") >> nt("chacha20"), params=params)
+        d_b = plat.tenant("b", weight=1.0).deploy(
+            nt("firewall") >> nt("nat") >> nt("chacha20"), params=params)
+        batches = {"a": [], "b": []}
+        for i, (dep, t) in enumerate([(d_a, "a"), (d_b, "b"), (d_a, "a"),
+                                      (d_a, "a"), (d_b, "b")]):
+            h, p = make_packets([5, 7, 3, 8, 2][i], seed=30 + i)
+            batches[t].append((h, p))
+            dep.inject(headers=h, payload=p)
+        plat.run()
+        assert plat.backend.stats["fused_dispatches"] > 0
+        rep = plat.report()
+        for t in ("a", "b"):
+            assert len(rep[t].outputs) == len(batches[t])
+            for (h, p), out in zip(batches[t], rep[t].outputs):
+                allow, newh, ct = vpc_chain(h, p, rules, key, nonce)
+                np.testing.assert_array_equal(np.asarray(out["allow"]),
+                                              np.asarray(allow))
+                np.testing.assert_array_equal(np.asarray(out["headers"]),
+                                              np.asarray(newh))
+                np.testing.assert_array_equal(np.asarray(out["payload"]),
+                                              np.asarray(ct))
+
+
+# ============================== satellite: name-order regression (engine) ====
+class TestNameOrderRegression:
+    def _run(self, heavy_name, light_name):
+        from repro import configs
+        from repro.serving.engine import Engine, EngineConfig
+        cfg = configs.get_tiny_config("musicgen-medium").replace(
+            frontend="tokens", vocab_size=64)
+        eng = Engine(cfg, EngineConfig(batch_sizes=(1,), max_len=64,
+                                       enable_cache_nt=False,
+                                       epoch_requests=2), seed=3)
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(2, 64, 6).astype(np.int32)
+                   for _ in range(12)]
+        for p in prompts[:9]:                  # heavy submits first
+            eng.submit(heavy_name, p, max_new=2)
+        for p in prompts[9:]:
+            eng.submit(light_name, p, max_new=2)
+        for _ in range(3):
+            eng.step()
+        # the admission sequence by *role*, independent of names
+        return ["heavy" if r.tenant == heavy_name else "light"
+                for r in eng.done]
+
+    def test_tenant_names_cannot_change_admission_order(self):
+        """The old ``sorted(self.queues)`` gave alphabetically-early names
+        a structural advantage; WDRR ring order must make the admission
+        sequence a pure function of submission order and weights."""
+        assert self._run("aaa", "zzz") == self._run("zzz", "aaa")
+
+    def test_scheduler_drain_is_name_blind(self):
+        for first, second in (("aaa", "zzz"), ("zzz", "aaa")):
+            s = FairScheduler(config=SchedConfig(quantum=1.0, strict=False))
+            for i in range(4):
+                s.submit(first, ("first", i), 10.0)
+                s.submit(second, ("second", i), 10.0)
+            roles = [item.payload[0] for _, item in s.drain()]
+            assert roles == ["first", "second"] * 4
