@@ -13,15 +13,21 @@ Backends: SimBackend (event-driven sNIC device model), ComputeBackend
 dispatches to a fused Pallas megakernel, everything else becomes one
 XLA-fused jitted program — either way batches are bucket-padded, coalesced
 and run with a single device sync per run()), ServeBackend (multi-tenant
-LLM serving engine).
+LLM serving engine), and ShardedBackend (a fleet of any of the above behind
+one Platform: consolidation-driven placement, cross-shard fair scheduling,
+deploy-on-new + drain-old rebalancing — `Platform([be0, be1])` wraps
+automatically).
 """
-from .backend import Backend, PlatformReport, TenantReport  # noqa: F401
+from .backend import (Backend, PlatformReport,  # noqa: F401
+                      TenantReport, merge_reports)
 from .compute_backend import (FUSED_KERNELS, VPC_SPECS,  # noqa: F401
                               WIRE_FIELDS, ComputeBackend, ComputeNT,
                               bucket_size)
 from .dag import (DagError, DagExpr, compile_dag, nt,  # noqa: F401
                   nt_chain, validate_dag)
+from .placement import PlacementDecision, Placer  # noqa: F401
 from .platform import Deployment, Platform, Tenant  # noqa: F401
+from .sharded_backend import ShardedBackend  # noqa: F401
 from .sim_backend import SimBackend  # noqa: F401
 
 

@@ -41,6 +41,9 @@ class PlatformReport:
     duration_ns: float = 0.0
     tenants: dict[str, TenantReport] = field(default_factory=dict)
     extra: dict[str, Any] = field(default_factory=dict)
+    #: per-shard breakdown (sharded backends only): shard name -> the
+    #: shard's own full report, in shard order
+    shards: dict[str, "PlatformReport"] = field(default_factory=dict)
 
     def __getitem__(self, tenant: str) -> TenantReport:
         return self.tenants[tenant]
@@ -52,6 +55,54 @@ class PlatformReport:
     @property
     def total_pkts(self) -> int:
         return sum(t.pkts_done for t in self.tenants.values())
+
+
+def merge_reports(backend_name: str,
+                  reports: dict[str, "PlatformReport"]) -> "PlatformReport":
+    """Merge per-shard reports into one fleet view with per-shard breakdowns.
+
+    Counters (packets, bytes, drops, Gbps) sum; mean latency is the
+    pkts-weighted mean; p99 is the worst shard's p99 (conservative — the raw
+    samples live in the per-shard reports); ``outputs`` concatenate in shard
+    order, so a deployment migrated from shard *i* to shard *j > i* keeps
+    its results in inject order.  Each merged tenant's
+    ``extra["per_shard"]`` maps shard name -> that shard's scalar stats, and
+    the full per-shard reports stay attached under ``.shards``.
+    """
+    out = PlatformReport(backend=backend_name,
+                         duration_ns=max((r.duration_ns
+                                          for r in reports.values()),
+                                         default=0.0),
+                         shards=dict(reports))
+    for shard_name, rep in reports.items():
+        for name, tr in rep.tenants.items():
+            dst = out.tenants.setdefault(
+                name, TenantReport(tenant=name, backend=backend_name))
+            lat_pkts = max(tr.pkts_done, 1 if tr.mean_latency_us else 0)
+            prev_pkts = dst.extra.get("_lat_pkts", 0)
+            if lat_pkts:
+                dst.mean_latency_us = (
+                    (dst.mean_latency_us * prev_pkts
+                     + tr.mean_latency_us * lat_pkts)
+                    / (prev_pkts + lat_pkts))
+                dst.extra["_lat_pkts"] = prev_pkts + lat_pkts
+            dst.p99_latency_us = max(dst.p99_latency_us, tr.p99_latency_us)
+            dst.pkts_done += tr.pkts_done
+            dst.bytes_done += tr.bytes_done
+            dst.drops += tr.drops
+            dst.gbps += tr.gbps
+            dst.outputs.extend(tr.outputs)
+            if "weight" in tr.extra:
+                dst.extra["weight"] = tr.extra["weight"]
+            dst.extra.setdefault("per_shard", {})[shard_name] = {
+                "pkts_done": tr.pkts_done, "bytes_done": tr.bytes_done,
+                "drops": tr.drops, "gbps": tr.gbps,
+                "mean_latency_us": tr.mean_latency_us,
+                "p99_latency_us": tr.p99_latency_us,
+            }
+    for tr in out.tenants.values():
+        tr.extra.pop("_lat_pkts", None)
+    return out
 
 
 @runtime_checkable

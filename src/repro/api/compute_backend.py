@@ -259,7 +259,21 @@ class ComputeBackend:
 
     def __init__(self, nts: dict[str, ComputeNT] | None = None,
                  use_fused: bool | None = None, donate: bool = True,
-                 quantum_bytes: float = 8 * 1500.0):
+                 quantum_bytes: float = 8 * 1500.0,
+                 name: str | None = None, device=None,
+                 capacity_gbps: float = 100.0):
+        """``name`` and ``device`` give each instance an explicit shard
+        identity: pass a ``jax.Device`` (or an index into
+        ``jax.devices()``) to pin every dispatch to that device instead of
+        inheriting the process-global default — a fleet of ComputeBackends
+        then maps one shard per accelerator.  ``capacity_gbps`` is the
+        nominal wire capacity a placer provisions against."""
+        if name is not None:
+            self.name = name
+        if device is not None and not hasattr(device, "platform"):
+            device = jax.devices()[int(device)]
+        self.device = device
+        self.capacity_gbps = capacity_gbps
         self.nts = dict(BUILTIN_COMPUTE_NTS)
         self.nts.update(nts or {})
         # default: megakernels only where they compile (TPU).  Off-TPU the
@@ -292,6 +306,11 @@ class ComputeBackend:
     @property
     def tenants(self) -> dict[str, float]:
         return self.sched.weights
+
+    def capacity(self) -> dict:
+        """Capacity probe for a placer: nominal wire Gbps + device identity."""
+        dev = self.device if self.device is not None else jax.devices()[0]
+        return {"gbps": self.capacity_gbps, "device": str(dev)}
 
     # ----------------------------------------------------------- protocol --
     def register(self, spec: NTSpec) -> None:
@@ -483,6 +502,12 @@ class ComputeBackend:
                     state[k] = v
             state["valid"] = (
                 jnp.arange(bucket, dtype=jnp.int32) < n)
+            if self.device is not None:
+                # explicit shard device: commit inputs so the jitted program
+                # executes there (device_put copies, so donation stays safe)
+                state = {k: (jax.device_put(v, self.device)
+                             if hasattr(v, "shape") else v)
+                         for k, v in state.items()}
             path = ("fused" if dep.fused is not None
                     and "allow" not in batches[0] else "composed")
             out = self._get_program(dep, bucket, path)(state, dep.params)

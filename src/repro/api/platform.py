@@ -91,10 +91,20 @@ class Tenant:
 
 
 class Platform:
-    """Facade over one backend; owns the NT-spec registry and tenant set."""
+    """Facade over one backend; owns the NT-spec registry and tenant set.
 
-    def __init__(self, backend: Backend,
+    Pass a *list* of backends to fan the platform across a shard fleet:
+    ``Platform([SimBackend(name="s0"), SimBackend(name="s1")])`` wraps them
+    in a :class:`~repro.api.sharded_backend.ShardedBackend`, so deploys are
+    routed by consolidation-driven placement and tenants are scheduled by
+    the cross-shard fair epoch instead of a single backend.
+    """
+
+    def __init__(self, backend: Backend | list[Backend] | tuple,
                  specs: dict[str, NTSpec] | list[NTSpec] | None = None):
+        if isinstance(backend, (list, tuple)):
+            from .sharded_backend import ShardedBackend
+            backend = ShardedBackend(list(backend))
         self.backend = backend
         self.specs: dict[str, NTSpec] = {}
         self.tenants: dict[str, Tenant] = {}
@@ -115,11 +125,21 @@ class Platform:
             self.backend.register(spec)
         return self
 
-    def tenant(self, name: str, weight: float = 1.0) -> Tenant:
-        if name not in self.tenants:
-            self.tenants[name] = Tenant(self, name, weight)
+    def tenant(self, name: str, weight: float | None = None) -> Tenant:
+        """Get-or-create a tenant handle.  ``weight`` given on a repeat call
+        *updates* the tenant's weight and propagates it to the backend's
+        scheduler(s) — on a sharded backend, to every shard's FairScheduler
+        — instead of being silently ignored; omit ``weight`` to fetch the
+        handle without touching the current weight."""
+        t = self.tenants.get(name)
+        if t is None:
+            t = Tenant(self, name, 1.0 if weight is None else weight)
+            self.tenants[name] = t
+            self.backend.add_tenant(name, t.weight)
+        elif weight is not None and weight != t.weight:
+            t.weight = weight
             self.backend.add_tenant(name, weight)
-        return self.tenants[name]
+        return t
 
     def run(self, **kw) -> None:
         self.backend.run(**kw)

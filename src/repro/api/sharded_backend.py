@@ -1,0 +1,377 @@
+"""ShardedBackend: one Platform fanned across a fleet of shard backends.
+
+The paper scales one sNIC to a rack (§5) with per-sNIC schedulers plus a
+peer control plane that places and migrates chains, so the rack provisions
+the *peak of the aggregate* rather than the sum of per-endpoint peaks
+(§2, Figs 2-3).  This backend is that layer for the whole repo: it wraps N
+shard backends — multiple :class:`~repro.api.sim_backend.SimBackend` sNICs,
+multiple :class:`~repro.api.compute_backend.ComputeBackend` devices, or a
+mixed fleet — behind the ordinary :class:`~repro.api.backend.Backend`
+protocol, so ``Platform(ShardedBackend([...]))`` (or just
+``Platform([be0, be1])``) needs no new tenant-facing API.
+
+Three mechanisms make the fleet one platform:
+
+  - **Placement** (:class:`~repro.api.placement.Placer`): every ``deploy``
+    is routed by measured load — chains whose loads anti-correlate pack
+    onto the same shard, correlated aggressors spread (scored with
+    :func:`repro.core.consolidation.analyze` over the per-tenant
+    served/deficit monitors each shard's scheduler already records).
+  - **Cross-shard fair sharing**: every shard keeps its own
+    :class:`~repro.core.sched.FairScheduler`; a *global* space-share epoch
+    collects each scheduler's demand window
+    (:meth:`~repro.core.sched.FairScheduler.demand`), solves fleet-wide
+    weighted max-min fairness under per-shard capacity constraints
+    (:func:`repro.core.sched.cross_shard_epoch`) and applies per-shard
+    grants — a tenant gorging on one shard yields its share of another to
+    tenants stuck there.
+  - **Rebalancing**: when a shard's measured peak-of-aggregate exceeds its
+    capacity, the placer proposes deploy-on-new-shard + drain-old moves
+    (the :class:`~repro.core.distributed.Rack` migration semantics lifted
+    to whole backends): the destination deploys the same DAG, the routing
+    table flips so new traffic lands there, and work already queued on the
+    source drains in place.  On the compute substrate per-packet state
+    (e.g. the ChaCha ``ctr``) is synthesized at inject time, so a
+    mid-run rebalance never changes any packet's bits.
+
+``report()`` merges the per-shard reports (:func:`merge_reports`): fleet
+totals per tenant, ``extra["per_shard"]`` breakdowns, the full shard
+reports under ``.shards``, and the placement/migration/consolidation logs
+under ``extra``.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.nt import NTDag, NTSpec
+from repro.core.sched import cross_shard_epoch
+
+from .backend import Backend, PlatformReport, merge_reports
+from .dag import DagError
+from .placement import PlacementDecision, Placer
+
+#: default global epoch = this many device epochs (sim shards); the global
+#: solve is host-side work, so it runs coarser than the per-sNIC loop
+GLOBAL_EPOCH_FACTOR = 4.0
+
+
+def _sched_of(shard):
+    return getattr(shard, "sched", None)
+
+
+def _is_event(shard) -> bool:
+    """Event-driven shards own an EventSim and advance virtual time."""
+    return hasattr(shard, "sim")
+
+
+class ShardedBackend:
+    name = "sharded"
+
+    def __init__(self, shards: list[Backend], *,
+                 placer: Placer | None = None,
+                 global_epoch_ns: float | None = None,
+                 auto_rebalance: bool = True,
+                 rebalance_every: int = 4):
+        if not shards:
+            raise ValueError("ShardedBackend needs at least one shard")
+        self.shards = list(shards)
+        # unique shard names (two unnamed SimBackends both say "sim")
+        names, seen = [], {}
+        for s in self.shards:
+            base = getattr(s, "name", "shard")
+            k = seen.get(base, 0)
+            seen[base] = k + 1
+            names.append(base if k == 0 else f"{base}#{k}")
+        self.shard_names = names
+        caps = [self._capacity_gbps(s) for s in self.shards]
+        self.placer = placer or Placer(caps)
+        self.capacity_gbps = caps
+        self.auto_rebalance = auto_rebalance
+        self.rebalance_every = max(int(rebalance_every), 1)
+        # routing state
+        self.dags: dict[int, NTDag] = {}
+        self.deploy_kw: dict[int, dict] = {}
+        self.routes: dict[int, int] = self.placer.routes     # dag -> shard
+        #: every shard a dag was ever deployed on, in visit order
+        self.deployed: dict[int, list[int]] = {}
+        self.tenant_weights: dict[str, float] = {}
+        self.migrations: list[tuple[int, str, str, int]] = []
+        # cross-shard epoch state
+        event = [s for s in self.shards if _is_event(s)]
+        if global_epoch_ns is None and event:
+            global_epoch_ns = GLOBAL_EPOCH_FACTOR * max(
+                getattr(s, "epoch_ns", 20_000.0) for s in event)
+        self.global_epoch_ns = global_epoch_ns or 80_000.0
+        self.global_epochs = 0
+        self.last_grants: dict = {}
+        self.last_demands: dict = {}
+        self._epoch_count = 0
+        for s in self.shards:
+            if hasattr(s, "defer_epochs"):
+                s.defer_epochs()     # the fleet epoch owns space sharing now
+
+    # --------------------------------------------------------------- misc --
+    @staticmethod
+    def _capacity_gbps(shard) -> float:
+        cap = getattr(shard, "capacity", None)
+        if callable(cap):
+            return float(cap().get("gbps", 100.0))
+        return 100.0
+
+    @property
+    def region_slots(self):
+        slots = [s.region_slots for s in self.shards
+                 if getattr(s, "region_slots", None) is not None]
+        return min(slots) if slots else None
+
+    def shard_of(self, dag_uid: int) -> Backend:
+        return self.shards[self.routes[dag_uid]]
+
+    # ----------------------------------------------------------- protocol --
+    def register(self, spec: NTSpec) -> None:
+        for s in self.shards:
+            s.register(spec)
+
+    def add_tenant(self, tenant: str, weight: float) -> None:
+        """Register (or re-weight) the tenant on EVERY shard's scheduler —
+        fleet-wide weights are what the cross-shard epoch solves over."""
+        self.tenant_weights[tenant] = weight
+        for s in self.shards:
+            s.add_tenant(tenant, weight)
+
+    def deploy(self, dag: NTDag, shard: int | None = None, **kw) -> None:
+        """Place the DAG (or honor an explicit ``shard=`` pin) and deploy it
+        on the chosen shard backend."""
+        if shard is None:
+            shard = self.placer.place(dag.tenant, dag.uid).shard
+        else:
+            if not 0 <= shard < len(self.shards):
+                raise DagError(f"shard {shard} out of range "
+                               f"(fleet has {len(self.shards)})")
+            self.placer.assign(dag.uid, dag.tenant, shard)
+            # pinned deploys still belong in the placement log — routes
+            # and decisions must tell one consistent story
+            self.placer.decisions.append(PlacementDecision(
+                "place", dag.uid, dag.tenant, shard, "pinned by caller"))
+        self.dags[dag.uid] = dag
+        self.deploy_kw[dag.uid] = dict(kw)
+        self.deployed[dag.uid] = [shard]
+        self.shards[shard].deploy(dag, **kw)
+
+    def inject(self, tenant: str, dag_uid: int, *args, **kw):
+        if dag_uid not in self.routes:
+            raise KeyError(f"DAG {dag_uid} not deployed on any shard")
+        return self.shard_of(dag_uid).inject(tenant, dag_uid, *args, **kw)
+
+    def add_source(self, kind: str, tenant: str, dag_uid: int, **kw) -> None:
+        """Attach a source on the deployment's current shard, with the sink
+        routed back through this backend — so if the deployment later
+        migrates, the source's traffic follows the routing table instead of
+        staying glued to the shard it was attached on."""
+        shard = self.shard_of(dag_uid)
+        if not hasattr(shard, "add_source"):
+            raise NotImplementedError(
+                f"shard {shard.name!r} has no traffic sources")
+        kw.setdefault("sink", self.inject)
+        shard.add_source(kind, tenant, dag_uid, **kw)
+
+    def settle(self) -> None:
+        for s in self.shards:
+            if hasattr(s, "settle"):
+                s.settle()
+
+    # ---------------------------------------------------------- migration --
+    def migrate(self, dag_uid: int, dst: int) -> bool:
+        """Deploy-on-new-shard + drain-old for one deployment: the DAG is
+        deployed at ``dst``, the routing table flips so every later inject
+        (and source attach) lands there, and work already queued on the old
+        shard drains where it is — nothing in flight is dropped or re-run."""
+        src = self.routes[dag_uid]
+        if dst == src:
+            return False
+        if not 0 <= dst < len(self.shards):
+            raise DagError(f"shard {dst} out of range")
+        dag = self.dags[dag_uid]
+        if dst not in self.deployed[dag_uid]:
+            # first visit only: a re-deploy on a migrate-back would reset
+            # the destination's accumulated per-deployment state/results
+            self.shards[dst].deploy(dag, **self.deploy_kw[dag_uid])
+            self.deployed[dag_uid].append(dst)
+        self.placer.assign(dag_uid, dag.tenant, dst)
+        self.migrations.append((self.global_epochs, self.shard_names[src],
+                                self.shard_names[dst], dag_uid))
+        return True
+
+    def rebalance(self) -> list[tuple[int, int, int]]:
+        """One placer rebalance pass; executes the proposed moves."""
+        moves = []
+        for uid, src, dst in self.placer.propose_moves():
+            if self.migrate(uid, dst):
+                self.placer.record_move(uid, src, dst)
+                moves.append((uid, src, dst))
+        return moves
+
+    # ------------------------------------------------- cross-shard epoch --
+    def _shard_window_caps(self, window_ns: float | None) -> dict[int, float]:
+        """Per-shard capacity for one global epoch, in cost units (bytes)."""
+        out = {}
+        for i, s in enumerate(self.shards):
+            gbps = self.capacity_gbps[i]
+            if window_ns is not None:
+                out[i] = gbps / 8.0 * window_ns     # Gb/s * ns -> bytes
+            else:
+                out[i] = math.inf                   # batched shard: un-paced
+        return out
+
+    def _cold_start(self, window_ns: float) -> None:
+        """Pace every tenant at its weight-proportional share before the
+        first measured window.  Without this the fleet's first window runs
+        unpaced and floods the devices with a weight-blind in-flight pool
+        that keeps draining 1:1 for several windows after the first real
+        grants land."""
+        if self._epoch_count or self.global_epochs:
+            return
+        wsum = sum(self.tenant_weights.values()) or 1.0
+        caps = self._shard_window_caps(window_ns)
+        for i, s in enumerate(self.shards):
+            if _is_event(s) and hasattr(s, "apply_grants"):
+                s.apply_grants({t: caps[i] * w / wsum
+                                for t, w in self.tenant_weights.items()},
+                               window_ns)
+
+    def _global_epoch(self, window_ns: float | None,
+                      shards: set[int] | None = None) -> None:
+        """Collect the (just-run) shards' scheduler demand windows, solve
+        fleet-wide weighted fairness, apply per-shard grants, reset the
+        windows.  ``shards`` scopes the epoch to the shards that actually
+        advanced: in a mixed fleet the batch shards run *after* the event
+        loop, so counting their standing backlog in every per-window event
+        epoch would throttle that tenant's sim pacing against phantom
+        grants no batch shard can apply."""
+        demands: dict[int, dict[str, float]] = {}
+        arrivals: dict[int, dict[str, float]] = {}
+        scheds = {}
+        for i, s in enumerate(self.shards):
+            if shards is not None and i not in shards:
+                continue
+            sched = _sched_of(s)
+            if sched is None:
+                continue
+            scheds[i] = sched
+            # solver demand includes standing backlog (work conservation);
+            # the placer's consolidation signal is raw arrivals — backlog
+            # would smooth the very burst shapes packing decisions feed on
+            demands[i] = sched.demand("ingress")
+            arrivals[i] = sched.demand("ingress", include_backlog=False)
+        # offered-load histories feed the placer (arrivals = what the
+        # tenant wanted this window, the consolidation signal of Figs 2-3);
+        # zero-arrival windows are real burst-shape signal, so they are
+        # recorded even when there is nothing to solve
+        total: dict[str, float] = {}
+        for i, d in arrivals.items():
+            scale = (8.0 / window_ns if window_ns else 0.0)  # bytes -> gbps
+            for t, v in d.items():
+                total[t] = total.get(t, 0.0) + (v * scale if scale
+                                                else v * 8e-9)
+        # placer histories sample once per event window (gbps); in a mixed
+        # fleet the batch pass is skipped — its unitless per-run arrivals
+        # would pollute the time-based profiles the event fleet keeps
+        if window_ns is not None or \
+                not any(_is_event(s) for s in self.shards):
+            for t in self.tenant_weights:
+                self.placer.record(t, total.get(t, 0.0))
+        if not any(demands.values()):
+            for sched in scheds.values():
+                sched.end_window()
+            return
+        grants = cross_shard_epoch(demands, self._shard_window_caps(window_ns),
+                                   self.tenant_weights)
+        for i, sched in scheds.items():
+            sched.end_window()
+            shard = self.shards[i]
+            if window_ns is not None and hasattr(shard, "apply_grants"):
+                shard.apply_grants(grants.get(i, {}), window_ns)
+        self.last_demands = demands
+        self.last_grants = grants
+        self.global_epochs += 1
+
+    # ---------------------------------------------------------------- run --
+    def run(self, duration_ms: float | None = None,
+            duration_ns: float | None = None, settle: bool = False,
+            **kw) -> None:
+        """Advance the fleet.  Event-driven shards step together in global
+        epochs (run each shard one window, then the cross-shard solve +
+        placer sampling, then maybe a rebalance pass); batched shards run
+        once and contribute one demand window."""
+        if settle:
+            self.settle()
+        event = [i for i, s in enumerate(self.shards) if _is_event(s)]
+        batch = [i for i, s in enumerate(self.shards) if not _is_event(s)]
+        if event:
+            if duration_ns is None:
+                dur = (duration_ms if duration_ms is not None else 1.0) \
+                    * 1_000_000.0
+            else:
+                dur = duration_ns
+            t = 0.0
+            self._cold_start(self.global_epoch_ns)
+            while t < dur:
+                step = min(self.global_epoch_ns, dur - t)
+                for i in event:
+                    self.shards[i].run(duration_ns=step)
+                t += step
+                self._global_epoch(step, shards=set(event))
+                self._epoch_count += 1
+                if self.auto_rebalance and \
+                        self._epoch_count % self.rebalance_every == 0:
+                    self.rebalance()
+        for i in batch:
+            self.shards[i].run(**kw)
+        if batch:
+            self._global_epoch(None, shards=set(batch))
+            if self.auto_rebalance:
+                self.rebalance()
+
+    # ------------------------------------------------------------- report --
+    def _shard_visit_order(self, tenant: str) -> list[int]:
+        """Shards this tenant's deployments landed on, in first-visit order
+        (deploy/migration history) — the order its outputs accumulated."""
+        order: list[int] = []
+        for uid in sorted(self.deployed):
+            if self.dags[uid].tenant != tenant:
+                continue
+            for s in self.deployed[uid]:
+                if s not in order:
+                    order.append(s)
+        return order
+
+    def report(self) -> PlatformReport:
+        per_shard = {self.shard_names[i]: s.report()
+                     for i, s in enumerate(self.shards)}
+        rep = merge_reports(self.name, per_shard)
+        for t, tr in rep.tenants.items():
+            tr.extra.setdefault("weight", self.tenant_weights.get(t, 1.0))
+            # merge_reports concatenates outputs in shard-dict order; a
+            # migration to a LOWER-indexed shard would reorder them, so
+            # rebuild per tenant in deployment-visit order (deploys happen
+            # before the migration's outputs exist, so this is inject order
+            # for any single-deployment tenant)
+            visit = self._shard_visit_order(t)
+            if len(visit) > 1:
+                outs: list = []
+                for i in visit:
+                    srep = per_shard[self.shard_names[i]]
+                    if t in srep.tenants:
+                        outs.extend(srep.tenants[t].outputs)
+                tr.outputs = outs
+        rep.extra["n_shards"] = len(self.shards)
+        rep.extra["global_epochs"] = self.global_epochs
+        rep.extra["placements"] = [str(d) for d in self.placer.decisions]
+        rep.extra["migrations"] = list(self.migrations)
+        rep.extra["routes"] = {uid: self.shard_names[s]
+                               for uid, s in self.routes.items()}
+        rep.extra["consolidation"] = self.placer.savings()
+        return rep
+
+
+__all__ = ["ShardedBackend"]

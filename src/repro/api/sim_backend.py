@@ -17,7 +17,7 @@ from repro.core.nt import NTDag, NTSpec
 from repro.core.sim import (EventSim, FlowStats, fb_kv_source, onoff_source,
                             poisson_source)
 from repro.core.snic import SNIC, SNICConfig
-from repro.core.sim import MS, US  # noqa: F401  (re-export convenience)
+from repro.core.sim import GBPS, MS, US  # noqa: F401  (re-export convenience)
 
 from .backend import PlatformReport, TenantReport
 
@@ -29,13 +29,23 @@ class SimBackend:
     name = "sim"
 
     def __init__(self, config: SNICConfig | None = None, n_snics: int = 1,
-                 specs: dict[str, NTSpec] | None = None):
+                 specs: dict[str, NTSpec] | None = None,
+                 name: str | None = None, seed: int = 0):
+        """``name`` and ``seed`` give each instance an explicit shard
+        identity: the sNIC device names derive from ``name``, and sources
+        attached without an explicit ``seed`` draw decorrelated streams
+        from this backend's seed — so a fleet of SimBackends never shares
+        implicit global state."""
+        if name is not None:
+            self.name = name
+        self.seed = seed
+        self._n_sources = 0
         self.sim = EventSim()
         self.specs: dict[str, NTSpec] = dict(specs or {})
-        cfg = config or SNICConfig()
+        cfg = config or SNICConfig(name=f"{self.name}.snic0")
         if n_snics > 1:
             cfgs = [dataclasses.replace(
-                        cfg, name=f"snic{i}",
+                        cfg, name=f"{self.name}.snic{i}",
                         tenant_weights=dict(cfg.tenant_weights))
                     for i in range(n_snics)]
             self.snics = [SNIC(self.sim, c, self.specs) for c in cfgs]
@@ -54,6 +64,60 @@ class SimBackend:
     @property
     def region_slots(self) -> int:
         return self.snic.cfg.region_slots
+
+    # ------------------------------------------------------ sharding hooks --
+    @property
+    def sched(self):
+        """The shard's FairScheduler, for the cross-shard epoch — None for
+        a multi-sNIC backend: its per-sNIC schedulers/capacities are not
+        one coherent shard vector (the internal Rack balances them), so the
+        fleet coordinator leaves such a shard locally managed."""
+        return self.snic.sched if len(self.snics) == 1 else None
+
+    @property
+    def epoch_ns(self) -> float:
+        return self.snic.cfg.epoch_ns
+
+    def capacity(self) -> dict:
+        """Capacity probe for a placer: nominal Gbps plus live device
+        headroom (regions/memory/store) from the sNIC probes."""
+        probes = [s.capacity_probe() for s in self.snics]
+        return {
+            "gbps": sum(p["uplink_gbps"] for p in probes),
+            "bytes_per_epoch": sum(p["ingress_bytes_per_epoch"]
+                                   for p in probes),
+            "free_regions": sum(p["free_regions"] for p in probes),
+            "free_mem_frames": sum(p["free_mem_frames"] for p in probes),
+        }
+
+    def defer_epochs(self) -> None:
+        """Hand the DRF epoch loop to an external (cross-shard)
+        coordinator: the per-sNIC epoch stops firing, and the coordinator
+        applies grants via :meth:`apply_grants`.  No-op for a multi-sNIC
+        backend (see :attr:`sched`) — its internal epochs stay live."""
+        if len(self.snics) > 1:
+            return
+        for s in self.snics:
+            s.cfg.enable_drf = False
+
+    def apply_grants(self, grants: dict[str, float],
+                     window_ns: float) -> None:
+        """Convert per-window byte grants into ingress token rates with the
+        same headroom/floor policy the local epoch uses, then re-pump.
+        This is the deferred shard's epoch boundary, so the per-instance
+        demand monitors reset here exactly as the local epoch would."""
+        for s in self.snics:
+            cfg = s.cfg
+            for t, g in grants.items():
+                if t not in s.sched.queues:
+                    continue
+                rate = max(g * cfg.ingress_headroom / max(window_ns, 1.0),
+                           cfg.ingress_floor_gbps * GBPS)
+                s.sched.set_rate(t, rate)
+                s._pump(t)
+            for insts in s.regions.by_name.values():
+                for i in insts:
+                    i.demand_bytes = 0.0
 
     def register(self, spec: NTSpec) -> None:
         self.specs[spec.name] = spec
@@ -77,8 +141,11 @@ class SimBackend:
 
     def add_source(self, kind: str, tenant: str, dag_uid: int,
                    duration_ms: float | None = None, snic: int = 0,
-                   **kw) -> None:
-        """Attach a stochastic traffic source starting at current sim time."""
+                   sink=None, **kw) -> None:
+        """Attach a stochastic traffic source starting at current sim time.
+        ``sink`` overrides where emissions land (default: this backend's
+        sNIC) — a sharded coordinator passes its own routed inject so a
+        migrated deployment's traffic follows the routing table."""
         try:
             src = _SOURCES[kind]
         except KeyError:
@@ -86,8 +153,14 @@ class SimBackend:
                 f"unknown source {kind!r}; known: {sorted(_SOURCES)}")
         until = (self.sim.now + duration_ms * MS if duration_ms is not None
                  else math.inf)
+        if "seed" not in kw:
+            # explicit per-backend seed identity: two shards built with
+            # different seeds draw decorrelated traffic by default
+            kw["seed"] = self.seed + 1000003 * self._n_sources
+        self._n_sources += 1
         src(self.sim, tenant=tenant, dag_uid=dag_uid,
-            sink=self.snics[snic].inject, until_ns=until, **kw)
+            sink=sink if sink is not None else self.snics[snic].inject,
+            until_ns=until, **kw)
 
     def settle(self) -> None:
         """Let in-flight partial reconfigurations finish (pre-launch PR) so a

@@ -45,7 +45,20 @@ def analyze(loads: np.ndarray) -> ConsolidationReport:
 
 
 def rack_analysis(loads: np.ndarray, rack_size: int) -> dict:
-    """Fig 3: no consolidation vs rack-level vs global consolidation."""
+    """Fig 3: no consolidation vs rack-level vs global consolidation.
+
+    ``rack_size`` need not divide the endpoint count — the tail rack simply
+    holds the remainder (a rack of 2 over 5 endpoints is racks of 2, 2, 1).
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    if loads.ndim != 2 or loads.shape[0] == 0 or loads.shape[1] == 0:
+        raise ValueError(
+            f"loads must be a non-empty (n_endpoints, T) matrix; got shape "
+            f"{loads.shape}")
+    if not float(rack_size).is_integer() or int(rack_size) <= 0:
+        raise ValueError(
+            f"rack_size must be a positive integer, got {rack_size!r}")
+    rack_size = int(rack_size)
     n = loads.shape[0]
     racks = [loads[i:i + rack_size] for i in range(0, n, rack_size)]
     per_rack_peaks = [float(r.sum(axis=0).max()) for r in racks]

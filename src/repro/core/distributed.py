@@ -68,23 +68,33 @@ class Rack:
         return min((ia - ib) % n, (ib - ia) % n)
 
     # ---------------------------------------------------------- migration --
-    def offload(self, src: SNIC, dag_uid: int,
-                prog: ChainProgram) -> SNIC | None:
-        """Launch ``prog`` at the closest peer with a free region; install a
-        MAT forwarding rule at ``src``.  Returns the peer or None."""
-        cands = []
-        for peer in self.snics:
-            if peer is src:
-                continue
-            view = self.views[src.cfg.name].get(peer.cfg.name)
-            free = (view.free_regions if view is not None else
-                    sum(1 for r in peer.regions.regions
-                        if r.state == RegionState.FREE))
-            if free > 0:
-                cands.append((self._ring_distance(src, peer), peer))
-        if not cands:
-            return None
-        _, peer = min(cands, key=lambda x: x[0])
+    def offload(self, src: SNIC, dag_uid: int, prog: ChainProgram,
+                target: SNIC | None = None,
+                migrate_back: bool = True) -> SNIC | None:
+        """Launch ``prog`` at a peer and install a MAT forwarding rule at
+        ``src``.  Without ``target`` the closest peer (ring distance) with a
+        free region is picked — the paper's overload offload; with
+        ``target`` the move is *directed* (a placer decided), and
+        ``migrate_back=False`` keeps it there instead of polling to migrate
+        home.  Returns the peer or None."""
+        if target is None:
+            cands = []
+            for peer in self.snics:
+                if peer is src:
+                    continue
+                view = self.views[src.cfg.name].get(peer.cfg.name)
+                free = (view.free_regions if view is not None else
+                        sum(1 for r in peer.regions.regions
+                            if r.state == RegionState.FREE))
+                if free > 0:
+                    cands.append((self._ring_distance(src, peer), peer))
+            if not cands:
+                return None
+            _, peer = min(cands, key=lambda x: x[0])
+        else:
+            if target is src:
+                return None
+            peer = target
         res = peer.regions.launch(prog, self.sim.now + PAPER.REMOTE_LAUNCH_NS,
                                   allow_context_switch=False)
         if res.region is None:
@@ -105,10 +115,28 @@ class Rack:
         src.remote_dags[dag_uid] = peer
         self.migrations.append((self.sim.now, src.cfg.name,
                                 peer.cfg.name, dag_uid))
-        # try to migrate back once a local region frees (poll)
-        self.sim.after(PAPER.MONITOR_NS, self._try_migrate_back, src,
-                       peer, dag_uid, prog)
+        if migrate_back:
+            # try to migrate back once a local region frees (poll)
+            self.sim.after(PAPER.MONITOR_NS, self._try_migrate_back, src,
+                           peer, dag_uid, prog)
         return peer
+
+    def migrate_to(self, src: SNIC, dst: SNIC, dag_uid: int,
+                   prog: ChainProgram | None = None) -> bool:
+        """Directed deploy-on-new + drain-old migration of one DAG's chain
+        (the placer-facing face of :meth:`offload`): launch at ``dst``,
+        install the MAT detour at ``src``, and *stay* — no migrate-back
+        polling.  ``prog`` defaults to the chain covering the DAG's first
+        branch.  In-flight packets already past the parser finish on
+        ``src``; everything arriving after the MAT rule lands detours."""
+        if prog is None:
+            dag = src.dags.get(dag_uid)
+            if dag is None or not dag.stages:
+                return False
+            branch = dag.stages[0][0]
+            prog = src._best_program(branch) or ChainProgram(tuple(branch))
+        return self.offload(src, dag_uid, prog, target=dst,
+                            migrate_back=False) is not None
 
     def _try_migrate_back(self, src: SNIC, peer: SNIC, dag_uid: int,
                           prog: ChainProgram) -> None:

@@ -28,8 +28,15 @@ The same :class:`FairScheduler` drives all three substrates:
 
 so any future substrate (the ROADMAP's sharding / multi-backend lane) gets
 tenancy by instantiating one object instead of re-deriving the paper's §4.4.
+
+For a *fleet* of shards (one FairScheduler each), :func:`cross_shard_epoch`
+is the global space-share solve: each shard exports its window's demand
+vector (:meth:`FairScheduler.demand`), the coordinator solves fleet-wide
+weighted max-min fairness under per-shard capacity constraints, applies the
+per-shard grants, and resets the windows (:meth:`FairScheduler.end_window`).
 """
 from .queues import QueueItem, TenantQueue  # noqa: F401
-from .scheduler import Clock, FairScheduler, Scale, SchedConfig  # noqa: F401
+from .scheduler import (Clock, FairScheduler, Scale,  # noqa: F401
+                        SchedConfig, cross_shard_epoch)
 from .spaceshare import SpaceShare  # noqa: F401
 from .timeshare import DeficitRoundRobin  # noqa: F401

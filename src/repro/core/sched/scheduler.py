@@ -229,6 +229,35 @@ class FairScheduler:
             capacities = self.capacity()
         return self.space.epoch(capacities, extra=extra)
 
+    # ======================================================== cross-shard ==
+    def demand(self, resource: str = "ingress",
+               include_backlog: bool = True) -> dict[str, float]:
+        """Peek this scheduler's per-tenant scalar demand for ``resource``
+        over the current space-share window (measured offered load plus,
+        optionally, standing backlog) WITHOUT solving or ending the window.
+
+        This is the per-shard vector a cross-shard coordinator aggregates:
+        each shard keeps one FairScheduler, a global epoch sums these
+        vectors, solves fleet-wide weighted fairness
+        (:func:`cross_shard_epoch`) and hands every shard its grants; the
+        coordinator then calls :meth:`end_window` so the next epoch measures
+        fresh.
+        """
+        out: dict[str, float] = {}
+        for t, d in self.space.admission.demands().items():
+            v = d.get(resource, 0.0)
+            if v > 0.0:
+                out[t] = v
+        if include_backlog:
+            for t, d in self.backlog_demand(resource).items():
+                out[t] = out.get(t, 0.0) + d[resource]
+        return out
+
+    def end_window(self) -> None:
+        """Start a fresh space-share measurement window (a cross-shard
+        epoch consumed this one instead of the local :meth:`epoch`)."""
+        self.space.admission.demand = {}
+
     # ============================================================ scaling ==
     def autoscale(self, name: str, served: float, capacity: float,
                   n_instances: int) -> int:
@@ -248,3 +277,76 @@ class FairScheduler:
                     "served_items": float(q.served_items),
                     "drops": float(q.drops), "deficit": q.deficit}
                 for n, q in self.queues.items()}
+
+
+# ================================================== cross-shard space share ==
+def _waterfill(demand: dict[str, float], cap: float,
+               weights: dict[str, float],
+               base: dict[str, float]) -> dict[str, float]:
+    """One shard's capacity split so every tenant's *global* weighted share
+    ``(base_t + grant_t) / w_t`` is equalized, subject to
+    ``0 <= grant_t <= demand_t`` and ``sum(grant) = min(cap, sum(demand))``.
+
+    ``base_t`` is what the tenant already holds on other shards — a tenant
+    drawing heavily elsewhere starts deeper in the water column and yields
+    local capacity to tenants whose only outlet is this shard.  Solved by
+    bisection on the water level (find level L with
+    ``sum(clip(L * w_t - base_t, 0, demand_t)) = total``).
+    """
+    tenants = [t for t, d in demand.items() if d > 0.0]
+    if not tenants or cap <= 0.0:
+        return {t: 0.0 for t in demand}
+    total = min(cap, sum(demand[t] for t in tenants))
+
+    def grants(level: float) -> dict[str, float]:
+        return {t: min(max(level * max(weights.get(t, 1.0), 1e-12)
+                           - base.get(t, 0.0), 0.0), demand[t])
+                for t in tenants}
+
+    hi = max((demand[t] + base.get(t, 0.0))
+             / max(weights.get(t, 1.0), 1e-12) for t in tenants) + 1.0
+    lo = 0.0
+    for _ in range(64):
+        mid = 0.5 * (lo + hi)
+        if sum(grants(mid).values()) < total:
+            lo = mid
+        else:
+            hi = mid
+    out = grants(hi)
+    for t in demand:
+        out.setdefault(t, 0.0)
+    return out
+
+
+def cross_shard_epoch(demands: dict, capacities: dict,
+                      weights: dict[str, float], *,
+                      rounds: int = 4) -> dict:
+    """One *global* space-share epoch over a fleet of shard schedulers.
+
+    ``demands[shard][tenant]`` is each shard scheduler's
+    :meth:`FairScheduler.demand` vector for the window,
+    ``capacities[shard]`` the shard's capacity in the same cost units, and
+    ``weights`` the fleet-wide tenant weights.  Returns
+    ``grants[shard][tenant]`` such that fleet-wide *weighted* shares are
+    max-min fair across shards while every shard stays feasible and no
+    capacity a demanding tenant could use is left idle (work conserving).
+
+    A tenant's demand is pinned to the shards its deployments live on (load
+    cannot be rerouted by the solver — that is the placer's job), so this is
+    weighted max-min with per-shard capacity constraints.  Solved by
+    Gauss-Seidel sweeps of per-shard water-filling where a tenant's grants
+    on *other* shards count as a head start against it; a few rounds
+    converge because each sweep only moves grants toward the fixed point.
+    """
+    shards = list(demands)
+    grants: dict = {s: {t: 0.0 for t in demands[s]} for s in shards}
+    for _ in range(max(rounds, 1)):
+        for s in shards:
+            if not demands[s]:
+                continue
+            base = {t: sum(grants[o].get(t, 0.0)
+                           for o in shards if o != s)
+                    for t in demands[s]}
+            grants[s] = _waterfill(demands[s], capacities.get(s, 0.0),
+                                   weights, base)
+    return grants

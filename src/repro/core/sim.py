@@ -173,6 +173,10 @@ def onoff_source(sim: EventSim, *, tenant: str, dag_uid: int, sink,
             sink(tenant, dag_uid, size)
             sim.after(size / bpns, emit)
         else:
-            sim.after(duty * period_ns + period_ns - t, emit)
+            # sleep to the next ON *start* (period boundary).  The old
+            # ``duty*period + period - t`` delay lands exactly on the ON
+            # window's END when the clock is boundary-aligned (t a multiple
+            # of the period grid), parking the source in OFF forever.
+            sim.after(period_ns - t, emit)
 
     sim.at(start_ns, emit)

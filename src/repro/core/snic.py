@@ -470,6 +470,8 @@ class SNIC:
         """Per-epoch DRF (§4.4): measured demands -> ingress rate limits.
         The scheduler solves; the device applies the grants after the
         solver's 3 us runtime and re-pumps the paced queues."""
+        if not self.cfg.enable_drf:
+            return          # loop handed off (e.g. to a cross-shard epoch)
         res = self.sched.epoch(
             self._capacities(),
             # standing backlog counts as ingress demand on top of the
@@ -495,6 +497,8 @@ class SNIC:
     # --------------------------------------------------------- autoscaling --
     def _monitor(self) -> None:
         """Instance autoscaling with MONITOR_PERIOD hysteresis (§4.4)."""
+        if not self.cfg.enable_autoscale:
+            return
         window = self.cfg.monitor_ns
         for name, insts in list(self.regions.by_name.items()):
             live = [i for i in insts
@@ -531,5 +535,21 @@ class SNIC:
                 return
 
     # ------------------------------------------------------------- reports --
+    def capacity_probe(self) -> dict:
+        """Live capacity snapshot for a placer / cross-shard coordinator:
+        link headroom in grant units (bytes per epoch), free FPGA regions,
+        free memory frames, and packet-store headroom."""
+        return {
+            "uplink_gbps": self.cfg.uplink_gbps,
+            "ingress_bytes_per_epoch":
+                self.cfg.uplink_gbps * GBPS * self.cfg.epoch_ns,
+            "epoch_ns": self.cfg.epoch_ns,
+            "free_regions": sum(1 for r in self.regions.regions
+                                if r.state == RegionState.FREE),
+            "free_mem_frames": len(self.vmem.free_frames),
+            "store_bytes_free": max(
+                self.cfg.pkt_store_bytes - self.store_bytes, 0.0),
+        }
+
     def total_gbps(self, dur_ns: float) -> float:
         return sum(s.bytes_done for s in self.stats.values()) / dur_ns / GBPS

@@ -275,3 +275,19 @@ class TestCrossSubstrate:
         assert snic.sched.weights["heavy"] == 3.0
         assert snic.sched.space.weights["heavy"] == 3.0
         assert snic.cfg.tenant_weights["heavy"] == 3.0
+
+    def test_tenant_weight_update_on_repeat_call(self):
+        """Satellite regression: a new weight on a repeat tenant() call
+        must update the backend scheduler (it used to be silently
+        ignored); calls without a weight leave the current one alone."""
+        plat = Platform(SimBackend(), specs=VPC_SPECS)
+        t = plat.tenant("acme", weight=3.0)
+        assert plat.tenant("acme") is t          # fetch: no weight change
+        assert plat.backend.snic.sched.weights["acme"] == 3.0
+        t2 = plat.tenant("acme", weight=1.5)
+        assert t2 is t and t.weight == 1.5
+        sched = plat.backend.snic.sched
+        assert sched.weights["acme"] == 1.5
+        assert sched.space.weights["acme"] == 1.5
+        # default-weight creation still works
+        assert plat.tenant("fresh").weight == 1.0

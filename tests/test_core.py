@@ -347,6 +347,52 @@ class TestConsolidation:
         med = float(np.median(loads))
         assert 18.0 < med < 30.0  # paper: median 24 Gbps
 
+    def test_rack_analysis_uneven_tail_rack(self):
+        """rack_size not dividing n_endpoints: the tail rack holds the
+        remainder and its peak still counts (5 endpoints @ rack_size=2 ->
+        racks of 2, 2, 1)."""
+        loads = np.zeros((5, 4))
+        for i in range(5):
+            loads[i, i % 4] = 10.0 * (i + 1)   # distinct, non-aligned peaks
+        r = rack_analysis(loads, rack_size=2)
+        # racks: {e0,e1}, {e2,e3}, {e4}; peaks: 20, 40, 50
+        assert r["sum_of_rack_peaks"] == pytest.approx(110.0)
+        assert r["sum_of_endpoint_peaks"] == pytest.approx(150.0)
+        # the tail rack (one endpoint) consolidates nothing: its peak is
+        # the endpoint's own peak
+        tail = rack_analysis(loads[4:5], rack_size=2)
+        assert tail["sum_of_rack_peaks"] == pytest.approx(50.0)
+
+    def test_onoff_source_resumes_from_boundary_aligned_off(self):
+        """Regression: a phase-shifted on/off source that starts OFF with a
+        period-grid-aligned clock must wake at the next ON *start* — the
+        old retry delay landed exactly on the ON window's END and parked
+        the source in OFF forever."""
+        from repro.core.sim import onoff_source
+        sim = EventSim()
+        period = 800_000.0
+        sim.run(5_080_001.0)               # e.g. a post-settle clock
+        got = []
+        onoff_source(sim, tenant="t", dag_uid=1,
+                     sink=lambda *a: got.append(sim.now),
+                     peak_gbps=10.0, duty=0.5, period_ns=period,
+                     phase=0.25, until_ns=sim.now + 4 * MS)
+        sim.run(sim.now + 4 * MS)
+        assert got, "source never emitted"
+        # every emission falls inside the shifted ON half of the period
+        for t in got:
+            assert ((t + 0.25 * period) % period) < 0.5 * period
+
+    def test_rack_analysis_rejects_bad_inputs(self):
+        loads = np.ones((4, 8))
+        for bad in (0, -1, 2.5):
+            with pytest.raises(ValueError, match="rack_size"):
+                rack_analysis(loads, rack_size=bad)
+        with pytest.raises(ValueError, match="matrix"):
+            rack_analysis(np.ones(8), rack_size=2)
+        with pytest.raises(ValueError, match="matrix"):
+            rack_analysis(np.ones((0, 8)), rack_size=2)
+
 
 # ================================================================== rack ====
 class TestDistributed:
@@ -372,6 +418,33 @@ class TestDistributed:
         sim.run(sim.now + PAPER.PR_NS * 3)
         assert done and done[0].hops == 1          # went via peer
         assert rack.migrations and rack.migrations[0][1] == "snic0"
+
+    def test_directed_migrate_to_stays_put(self):
+        """Placer-driven migration: migrate_to() launches at the chosen
+        peer, detours traffic via the MAT rule, and does NOT poll to
+        migrate back (deploy-on-new + drain-old, not overload spill)."""
+        sim = EventSim()
+        rack = make_rack(sim, 3, SPECS,
+                         cfg_kw=dict(n_regions=2, region_slots=4,
+                                     enable_drf=False,
+                                     enable_autoscale=False))
+        a, _b, c = rack.snics
+        d1 = chain_dag(1, "u1", ("NT1",))
+        a.deploy([d1])
+        sim.run(PAPER.PR_NS + 1)
+        assert rack.migrate_to(a, c, 1)        # directed: skip the closer b
+        done = []
+        c.done_hook = lambda p: done.append(p)
+        sim.run(sim.now + PAPER.PR_NS + 1)
+        a.inject("u1", 1, 500)
+        sim.run(sim.now + 1 * MS)
+        assert done and done[0].hops == 1      # served by c via the detour
+        assert rack.migrations[-1][1] == a.cfg.name
+        assert rack.migrations[-1][2] == c.cfg.name
+        # a has free regions the whole time, yet the chain must NOT bounce
+        # back home (directed moves carry no migrate-back poll)
+        sim.run(sim.now + 20 * MS)
+        assert 1 in a.remote_dags
 
     def test_remote_memory_pooling(self):
         sim = EventSim()

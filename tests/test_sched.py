@@ -16,9 +16,9 @@ import pytest
 
 from repro.core.policy import StepScaler, UtilizationScaler
 from repro.core.sched import (DeficitRoundRobin, FairScheduler, SchedConfig,
-                              TenantQueue)
-from repro.api import (ComputeBackend, DagError, Platform, SimBackend,
-                       VPC_SPECS, nt)
+                              TenantQueue, cross_shard_epoch)
+from repro.api import (ComputeBackend, DagError, Placer, Platform,
+                       ShardedBackend, SimBackend, VPC_SPECS, nt)
 
 
 # ============================================================ TenantQueue ====
@@ -451,6 +451,327 @@ class TestComputeSubstrateFairness:
                                               np.asarray(newh))
                 np.testing.assert_array_equal(np.asarray(out["payload"]),
                                               np.asarray(ct))
+
+
+# ===================================== cross-shard epoch: solver + hooks ====
+class TestCrossShardEpoch:
+    def test_symmetric_flood_grants_weight_ratio(self):
+        """Both tenants flooding both shards: every shard's grant split is
+        the weight ratio, and the fleet total is fully allocated."""
+        g = cross_shard_epoch({0: {"a": 300.0, "b": 300.0},
+                               1: {"a": 300.0, "b": 300.0}},
+                              {0: 100.0, 1: 100.0}, {"a": 2.0, "b": 1.0})
+        for s in (0, 1):
+            assert g[s]["a"] / g[s]["b"] == pytest.approx(2.0, rel=1e-6)
+            assert g[s]["a"] + g[s]["b"] == pytest.approx(100.0)
+
+    def test_spanning_tenant_yields_contended_shard(self):
+        """The global twist per-shard DRF cannot see: heavy (w=2) spans
+        both shards, light (w=1) only shard 0.  Heavy's shard-1 holdings
+        count against it on shard 0, so light gets 2/3 of shard 0 — while
+        per-shard fairness would hand heavy 2/3 of it."""
+        g = cross_shard_epoch({0: {"heavy": 300.0, "light": 300.0},
+                               1: {"heavy": 300.0}},
+                              {0: 100.0, 1: 100.0},
+                              {"heavy": 2.0, "light": 1.0})
+        assert g[1]["heavy"] == pytest.approx(100.0)
+        assert g[0]["heavy"] == pytest.approx(100.0 / 3, rel=1e-3)
+        assert g[0]["light"] == pytest.approx(200.0 / 3, rel=1e-3)
+        total_h = g[0]["heavy"] + g[1]["heavy"]
+        assert total_h / g[0]["light"] == pytest.approx(2.0, rel=1e-3)
+
+    def test_work_conserving_across_unequal_demand(self):
+        """Capacity no one else wants goes to whoever demands it; a tenant
+        is never granted more than it asked for."""
+        g = cross_shard_epoch({0: {"a": 300.0}, 1: {"b": 40.0}},
+                              {0: 100.0, 1: 100.0}, {"a": 1.0, "b": 1.0})
+        assert g[0]["a"] == pytest.approx(100.0)
+        assert g[1]["b"] == pytest.approx(40.0)
+
+    def test_scheduler_demand_peek_and_end_window(self):
+        s = FairScheduler({"a": 1.0}, SchedConfig(quantum=1.0))
+        s.observe("a", "ingress", 500.0)
+        s.submit("a", "pkt", 200.0)            # standing backlog counts too
+        assert s.demand("ingress") == {"a": 700.0}
+        assert s.demand("ingress") == {"a": 700.0}   # peek: non-consuming
+        assert s.demand("ingress", include_backlog=False) == {"a": 500.0}
+        s.end_window()
+        assert s.demand("ingress") == {"a": 200.0}   # backlog persists
+
+
+# ===================== acceptance: 2-shard x 2-tenant global convergence ====
+class TestShardedSimFairness:
+    CHAIN = staticmethod(lambda: nt("firewall") >> nt("nat"))
+
+    @pytest.mark.parametrize("w", [2.0, 3.0])
+    def test_global_weighted_shares_converge(self, w):
+        """2-shard x 2-tenant sweep: both tenants flood both shards of a
+        sharded sim fleet; *global* served-byte shares land on the weights
+        within 5% (one cross-shard epoch per 4 device epochs, per-sNIC DRF
+        handed off to the fleet)."""
+        plat = Platform([SimBackend(name="s0"), SimBackend(name="s1")],
+                        specs=VPC_SPECS)
+        heavy = plat.tenant("heavy", weight=w)
+        light = plat.tenant("light", weight=1.0)
+        deps = [t.deploy(self.CHAIN(), shard=s)
+                for s in (0, 1) for t in (heavy, light)]
+        plat.backend.settle()
+        for i, d in enumerate(deps):
+            d.source("poisson", rate_gbps=250.0, mean_bytes=1000,
+                     seed=i + 1, duration_ms=2.0)
+        plat.run(duration_ms=2.0)
+        rep = plat.report()
+        ratio = rep["heavy"].bytes_done / rep["light"].bytes_done
+        assert ratio == pytest.approx(w, rel=0.05), ratio
+        # per-shard breakdowns are attached and sum to the fleet totals
+        for t in ("heavy", "light"):
+            ps = rep[t].extra["per_shard"]
+            assert set(ps) == {"s0", "s1"}
+            assert sum(v["bytes_done"] for v in ps.values()) \
+                == rep[t].bytes_done
+        assert rep.extra["global_epochs"] > 10
+        assert rep["heavy"].extra["weight"] == w
+
+    def test_mixed_fleet_compute_backlog_cannot_throttle_sim_share(self):
+        """Regression: in a mixed sim+compute fleet the global epoch is
+        scoped to the shards that just ran — a tenant's standing compute
+        backlog (whose shard runs later and applies no pacing) must not be
+        re-counted every sim window and shrink its sim-side grant."""
+        import jax.numpy as jnp
+        from repro.serving.vpc import make_packets, make_rules
+        params = {"firewall": {"rules": make_rules(8, seed=2)},
+                  "nat": {"nat_ip": 0x0A000001},
+                  "chacha20": {"key": jnp.arange(8, dtype=jnp.uint32),
+                               "nonce": jnp.arange(3, dtype=jnp.uint32)}}
+        plat = Platform([SimBackend(name="edge"),
+                         ComputeBackend(use_fused=False, name="gpu0")],
+                        specs=VPC_SPECS)
+        a = plat.tenant("a", weight=2.0)
+        b = plat.tenant("b", weight=1.0)
+        d_a = a.deploy(self.CHAIN(), shard=0)
+        d_b = b.deploy(self.CHAIN(), shard=0)
+        d_cmp = a.deploy(nt("firewall") >> nt("nat") >> nt("chacha20"),
+                         params=params, shard=1)
+        plat.backend.settle()
+        d_a.source("poisson", rate_gbps=300.0, mean_bytes=1000, seed=1,
+                   duration_ms=2.0)
+        d_b.source("poisson", rate_gbps=300.0, mean_bytes=1000, seed=2,
+                   duration_ms=2.0)
+        h, p = make_packets(64, seed=3)
+        for _ in range(8):                   # large standing compute backlog
+            d_cmp.inject(headers=h, payload=p)
+        plat.run(duration_ms=2.0)
+        rep = plat.report()
+        ratio = (rep["a"].extra["per_shard"]["edge"]["bytes_done"]
+                 / rep["b"].extra["per_shard"]["edge"]["bytes_done"])
+        assert ratio == pytest.approx(2.0, rel=0.1), ratio
+        assert rep["a"].extra["per_shard"]["gpu0"]["pkts_done"] == 8 * 64
+
+    def test_attached_source_follows_migration(self):
+        """Regression: a stochastic source attached before a rebalance must
+        follow the routing table — its sink resolves the route per packet,
+        so after migrate() (and the destination's PR latency) the traffic
+        lands on the new shard instead of staying glued to the old one."""
+        sb = ShardedBackend([SimBackend(name="s0"), SimBackend(name="s1")],
+                            auto_rebalance=False)
+        plat = Platform(sb, specs=VPC_SPECS)
+        dep = plat.tenant("a").deploy(self.CHAIN(), shard=0)
+        sb.settle()
+        dep.source("poisson", rate_gbps=20.0, mean_bytes=1000, seed=1,
+                   duration_ms=8.0)
+        plat.run(duration_ms=0.8)
+        assert sb.migrate(dep.uid, 1)
+        plat.run(duration_ms=6.5)     # > PR_NS: migrated chain goes live
+        ps = plat.report()["a"].extra["per_shard"]
+        assert ps["s0"]["pkts_done"] > 0          # pre-migration traffic
+        assert ps["s1"]["pkts_done"] > ps["s0"]["pkts_done"]
+
+    def test_spanning_aggressor_yields_contended_shard(self):
+        """Global — not per-shard — fairness: heavy (w=2) floods BOTH
+        shards, light (w=1) only shard 0.  Per-shard DRF would give heavy
+        2x light ON shard 0; the cross-shard epoch instead counts heavy's
+        shard-1 take against it, so light out-serves heavy on the shard
+        they contend (~2:1 the other way) and the fleet-wide ratio stays
+        near the weights."""
+        plat = Platform([SimBackend(name="s0"), SimBackend(name="s1")],
+                        specs=VPC_SPECS)
+        heavy = plat.tenant("heavy", weight=2.0)
+        light = plat.tenant("light", weight=1.0)
+        d_h0 = heavy.deploy(self.CHAIN(), shard=0)
+        d_h1 = heavy.deploy(self.CHAIN(), shard=1)
+        d_l = light.deploy(self.CHAIN(), shard=0)
+        plat.backend.settle()
+        for i, d in enumerate((d_h0, d_h1, d_l)):
+            d.source("poisson", rate_gbps=250.0, mean_bytes=1000,
+                     seed=i + 1, duration_ms=2.0)
+        plat.run(duration_ms=2.0)
+        rep = plat.report()
+        s0_ratio = (rep["heavy"].extra["per_shard"]["s0"]["bytes_done"]
+                    / rep["light"].extra["per_shard"]["s0"]["bytes_done"])
+        assert s0_ratio < 1.0, s0_ratio      # flipped vs per-shard DRF's 2.0
+        # the solver's grants are exactly 1/3 vs 2/3 on the contended shard
+        grants = plat.backend.last_grants
+        assert grants[0]["heavy"] / grants[0]["light"] \
+            == pytest.approx(0.5, rel=0.02)
+        # fleet-wide ratio near the weights (device efficiency differs a
+        # few % between a contended and a solo shard, hence the wider band)
+        ratio = rep["heavy"].bytes_done / rep["light"].bytes_done
+        assert ratio == pytest.approx(2.0, rel=0.15), ratio
+
+
+# ============================================= placement unit behaviours ====
+class TestPlacement:
+    def _bursty(self, phase: int, n: int = 64) -> np.ndarray:
+        t = np.arange(n)
+        return np.where((t // 16) % 2 == phase, 60.0, 5.0)
+
+    def test_anti_correlated_pack_correlated_spread(self):
+        """Anti-correlated tenants land on the same shard (their combined
+        peak barely exceeds one alone); a correlated aggressor spreads to
+        the other shard."""
+        placer = Placer([100.0, 100.0])
+        for v in self._bursty(0):
+            placer.record("a", v)
+        for v in self._bursty(1):
+            placer.record("b", v)          # anti-correlated with a
+        for v in self._bursty(0):
+            placer.record("c", v)          # correlated with a
+        d_a = placer.place("a", 1)
+        d_b = placer.place("b", 2)
+        d_c = placer.place("c", 3)
+        assert d_b.shard == d_a.shard      # packed together
+        assert d_c.shard != d_a.shard      # spread away
+        sav = placer.savings()
+        assert sav["savings"] > 1.1        # fleet provisions < sum of peaks
+
+    def test_cold_start_spreads_by_load(self):
+        placer = Placer([100.0, 100.0])
+        assert placer.place("x", 1).shard == 0
+        assert placer.place("y", 2).shard == 1       # least-loaded
+        assert "cold start" in placer.place("z", 3).reason
+
+    def test_rebalance_moves_correlated_tenant_off_overload(self):
+        """Two correlated tenants packed on shard 0 push its measured
+        peak-of-aggregate over capacity; rebalance() moves one to the
+        shard whose residents anti-correlate with it."""
+        placer = Placer([100.0, 100.0])
+        for v in self._bursty(0):
+            placer.record("a", v)
+        for v in self._bursty(0):
+            placer.record("c", v)          # correlated with a
+        for v in self._bursty(1):
+            placer.record("b", v)
+        placer.assign(1, "a", 0)
+        placer.assign(2, "c", 0)
+        placer.assign(3, "b", 1)
+        assert placer.overloaded() == [0]  # 120 peak > 100 capacity
+        moves = placer.rebalance()
+        assert moves and moves[0][1] == 0 and moves[0][2] == 1
+        assert placer.overloaded() == []   # anti-correlated fit: peak ~65
+
+
+# ============================ acceptance: sharded compute + rebalancing ====
+class TestShardedCompute:
+    def _mk_params(self):
+        import jax.numpy as jnp
+        from repro.serving.vpc import make_rules
+        return {"firewall": {"rules": make_rules(8, seed=2)},
+                "nat": {"nat_ip": 0x0A000001},
+                "chacha20": {"key": jnp.arange(8, dtype=jnp.uint32) * 3 + 1,
+                             "nonce": jnp.arange(3, dtype=jnp.uint32) + 7}}
+
+    def test_weight_update_propagates_to_every_shard(self):
+        """Satellite: Platform.tenant(name, weight=...) on a repeat call
+        updates the weight on EVERY shard's FairScheduler instead of being
+        silently ignored."""
+        be0 = ComputeBackend(use_fused=False, name="c0")
+        be1 = ComputeBackend(use_fused=False, name="c1")
+        plat = Platform([be0, be1], specs=VPC_SPECS)
+        plat.tenant("acme", weight=2.0)
+        assert be0.sched.weights["acme"] == 2.0
+        assert be1.sched.weights["acme"] == 2.0
+        t = plat.tenant("acme", weight=5.0)          # repeat with new weight
+        assert t.weight == 5.0
+        assert be0.sched.weights["acme"] == 5.0
+        assert be1.sched.weights["acme"] == 5.0
+        assert plat.backend.tenant_weights["acme"] == 5.0
+        plat.tenant("acme")                          # no weight: no change
+        assert be0.sched.weights["acme"] == 5.0
+
+    def test_megakernel_bit_exact_across_midrun_rebalance(self):
+        """Acceptance: fused-megakernel outputs stay bit-exact when a
+        deployment is rebalanced (deploy-on-new + drain-old) from one
+        compute shard to another between runs — per-packet state (the
+        ChaCha ctr) travels with the inject, never with the shard."""
+        from repro.serving.vpc import make_packets, vpc_chain
+        params = self._mk_params()
+        sb = ShardedBackend(
+            [ComputeBackend(use_fused=True, name="c0"),
+             ComputeBackend(use_fused=True, name="c1")],
+            auto_rebalance=False)
+        plat = Platform(sb, specs=VPC_SPECS)
+        dep = plat.tenant("alice", weight=2.0).deploy(
+            nt("firewall") >> nt("nat") >> nt("chacha20"),
+            params=params, shard=0)
+        batches = []
+        for i, n in enumerate([5, 7, 3]):
+            h, p = make_packets(n, seed=40 + i)
+            batches.append((h, p))
+            dep.inject(headers=h, payload=p)
+        plat.run()
+        assert sb.migrate(dep.uid, 1)                # mid-run rebalance
+        for i, n in enumerate([8, 2]):
+            h, p = make_packets(n, seed=50 + i)
+            batches.append((h, p))
+            dep.inject(headers=h, payload=p)
+        plat.run()
+        rep = plat.report()
+        assert rep.extra["migrations"] == [(0, "c0", "c1", dep.uid)]
+        assert rep.extra["routes"] == {dep.uid: "c1"}
+        # both shards actually dispatched through the megakernel
+        assert all(s.stats["fused_dispatches"] > 0 for s in sb.shards)
+        outs = rep["alice"].outputs
+        assert len(outs) == len(batches)
+        rules = params["firewall"]["rules"]
+        key, nonce = params["chacha20"]["key"], params["chacha20"]["nonce"]
+        for (h, p), out in zip(batches, outs):       # merged in inject order
+            allow, newh, ct = vpc_chain(h, p, rules, key, nonce)
+            np.testing.assert_array_equal(np.asarray(out["allow"]),
+                                          np.asarray(allow))
+            np.testing.assert_array_equal(np.asarray(out["headers"]),
+                                          np.asarray(newh))
+            np.testing.assert_array_equal(np.asarray(out["payload"]),
+                                          np.asarray(ct))
+
+    def test_outputs_stay_in_inject_order_migrating_to_lower_shard(self):
+        """Regression: a rebalance onto a LOWER-indexed shard must not
+        reorder the merged outputs (the report rebuilds them in
+        deployment-visit order, not shard-index order)."""
+        from repro.serving.vpc import make_packets
+        params = self._mk_params()
+        sb = ShardedBackend(
+            [ComputeBackend(use_fused=False, name="c0"),
+             ComputeBackend(use_fused=False, name="c1")],
+            auto_rebalance=False)
+        plat = Platform(sb, specs=VPC_SPECS)
+        dep = plat.tenant("bob").deploy(
+            nt("firewall") >> nt("nat") >> nt("chacha20"),
+            params=params, shard=1)                  # starts on the HIGH one
+        sizes = [3, 5, 4, 6]
+        marks = []
+        for i, n in enumerate(sizes[:2]):
+            h, p = make_packets(n, seed=70 + i)
+            marks.append(n)
+            dep.inject(headers=h, payload=p)
+        plat.run()
+        assert sb.migrate(dep.uid, 0)                # migrate DOWN to c0
+        for i, n in enumerate(sizes[2:]):
+            h, p = make_packets(n, seed=80 + i)
+            marks.append(n)
+            dep.inject(headers=h, payload=p)
+        plat.run()
+        outs = plat.report()["bob"].outputs
+        assert [int(o["payload"].shape[0]) for o in outs] == marks
 
 
 # ============================== satellite: name-order regression (engine) ====
