@@ -1,0 +1,43 @@
+"""repro.analysis — the static-analysis plane for safe multi-tenant offload.
+
+SuperNIC's promise is that tenants can "efficiently *and safely*" offload
+network-task DAGs to shared hardware (§3); this package is the *safely*
+part, three passes over one shared :class:`~repro.analysis.diagnostics.Diagnostic`
+record type:
+
+  - **Admission verifier** (:mod:`repro.analysis.verifier`): static checks
+    run at ``Platform.deploy()`` time — structure (cycles, fork/join arity,
+    unreachable stages, signature/shape compatibility along every edge),
+    resource bounds (state bytes and Pallas VMEM tile footprints vs the
+    ``core.vmem`` budgets, chain bottleneck rate vs declared capacity), and
+    isolation (no cross-tenant NT state unless the spec is ``shared``).
+  - **Datapath linter** (:mod:`repro.analysis.linter`): ast-based rules for
+    the anti-patterns this repo has been bitten by — host syncs inside hot
+    loops, jit-cache-busting call sites, non-donated dispatch buffers,
+    nondeterminism hazards in the event sim.
+  - **Invariant harness** (:mod:`repro.analysis.invariants`): opt-in
+    (``REPRO_SANITIZE=1``) conservation checks the sim/fleet layers run at
+    epoch boundaries — credits granted == consumed + residual, packets
+    injected == delivered + dropped + queued + in flight, WDRR deficits
+    never negative.
+
+CLI: ``python -m repro.analysis {lint,hlo,typecheck} ...`` — see
+:mod:`repro.analysis.__main__`.  CI gates on a checked-in baseline
+(``analysis_baseline.json``): pre-existing diagnostics are enumerated, new
+ones fail the build.
+"""
+from .diagnostics import (Baseline, Diagnostic, Severity,  # noqa: F401
+                          render_text)
+
+__all__ = ["AdmissionError", "Baseline", "Diagnostic", "Severity",
+           "render_text", "verify"]
+
+
+def __getattr__(name):
+    # verifier lazily: it imports repro.api.dag, and the runtime hooks in
+    # repro.core/* import THIS package for the invariant harness — an eager
+    # verifier import would close that cycle mid-initialization
+    if name in ("AdmissionError", "verify"):
+        from . import verifier
+        return getattr(verifier, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,138 @@
+"""CLI: ``python -m repro.analysis {lint,hlo,typecheck}``.
+
+  lint [PATHS...] [--baseline FILE] [--update-baseline] [--json OUT]
+      Run the datapath linter.  With a baseline, pre-existing diagnostics
+      (enumerated per rule+file) pass; NEW ones fail (exit 1).
+  hlo grep ARCH SHAPE MESH PATTERN [LIMIT]
+  hlo buffers ARCH SHAPE MESH [MIN_BYTES]
+      Compile an arch/shape cell and grep the HLO / rank its buffers.
+  typecheck [--baseline FILE] [--update-baseline]
+      Run mypy over the typed subset (mypy.ini).  Skips cleanly (exit 0)
+      when mypy is not installed — the container image does not carry it;
+      CI does.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import shutil
+import subprocess
+import sys
+
+from .diagnostics import Baseline, render_text, to_json
+from .linter import lint_paths
+
+DEFAULT_LINT_PATHS = ["src"]
+DEFAULT_BASELINE = "analysis_baseline.json"
+DEFAULT_MYPY_BASELINE = "mypy_baseline.txt"
+
+
+# ----------------------------------------------------------------- lint ----
+def cmd_lint(args) -> int:
+    diags = lint_paths(args.paths or DEFAULT_LINT_PATHS)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            fh.write(to_json(diags))
+    base = Baseline.load(args.baseline)
+    if args.update_baseline:
+        Baseline.from_diags(diags).save(args.baseline)
+        print(f"baseline updated: {args.baseline} "
+              f"({len(diags)} diagnostic(s) enumerated)")
+        return 0
+    fresh = base.new(diags)
+    if not fresh:
+        known = len(diags)
+        print("lint: no new diagnostics"
+              + (f" ({known} baseline-enumerated)" if known else ""))
+        return 0
+    print(render_text(fresh))
+    print(f"lint: {len(fresh)} NEW diagnostic(s) not in {args.baseline}")
+    return 1
+
+
+# ------------------------------------------------------------------ hlo ----
+def cmd_hlo(args) -> int:
+    from . import hlo
+    if args.hlo_cmd == "grep":
+        return hlo.main_grep(args.arch, args.shape, args.mesh,
+                             args.pattern, args.limit)
+    return hlo.main_buffers(args.arch, args.shape, args.mesh,
+                            args.min_bytes)
+
+
+# ------------------------------------------------------------ typecheck ----
+def _strip_linenos(lines: list[str]) -> list[str]:
+    """``path:123: error: msg`` -> ``path: error: msg`` so edits above an
+    existing error don't churn the baseline."""
+    return [re.sub(r"^([^:]+):\d+(:\d+)?:", r"\1:", ln) for ln in lines]
+
+
+def cmd_typecheck(args) -> int:
+    if shutil.which("mypy") is None:
+        print("typecheck: mypy not installed; skipping (CI installs it)")
+        return 0
+    proc = subprocess.run(
+        ["mypy", "--config-file", "mypy.ini",
+         "src/repro/api", "src/repro/core/sched"],
+        capture_output=True, text=True)
+    errors = [ln for ln in proc.stdout.splitlines() if ": error:" in ln]
+    normalized = sorted(set(_strip_linenos(errors)))
+    if args.update_baseline:
+        with open(args.baseline, "w", encoding="utf-8") as fh:
+            fh.write("\n".join(normalized) + ("\n" if normalized else ""))
+        print(f"baseline updated: {args.baseline} "
+              f"({len(normalized)} error pattern(s))")
+        return 0
+    try:
+        with open(args.baseline, encoding="utf-8") as fh:
+            known = set(ln.strip() for ln in fh if ln.strip())
+    except FileNotFoundError:
+        known = set()
+    fresh = [ln for ln in normalized if ln not in known]
+    if not fresh:
+        print(f"typecheck: no new errors "
+              f"({len(normalized)} baseline-enumerated)")
+        return 0
+    print("\n".join(fresh))
+    print(f"typecheck: {len(fresh)} NEW error pattern(s) "
+          f"not in {args.baseline}")
+    return 1
+
+
+# ----------------------------------------------------------------- main ----
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    lp = sub.add_parser("lint", help="datapath linter")
+    lp.add_argument("paths", nargs="*", help=f"default: {DEFAULT_LINT_PATHS}")
+    lp.add_argument("--baseline", default=DEFAULT_BASELINE)
+    lp.add_argument("--update-baseline", action="store_true")
+    lp.add_argument("--json", default=None,
+                    help="also write diagnostics as JSON (CI artifact)")
+    lp.set_defaults(fn=cmd_lint)
+
+    hp = sub.add_parser("hlo", help="HLO grep / top buffers")
+    hsub = hp.add_subparsers(dest="hlo_cmd", required=True)
+    hg = hsub.add_parser("grep")
+    for a in ("arch", "shape", "mesh", "pattern"):
+        hg.add_argument(a)
+    hg.add_argument("limit", nargs="?", type=int, default=20)
+    hb = hsub.add_parser("buffers")
+    for a in ("arch", "shape", "mesh"):
+        hb.add_argument(a)
+    hb.add_argument("min_bytes", nargs="?", type=float, default=100e6)
+    hp.set_defaults(fn=cmd_hlo)
+
+    tp = sub.add_parser("typecheck", help="mypy over the typed subset")
+    tp.add_argument("--baseline", default=DEFAULT_MYPY_BASELINE)
+    tp.add_argument("--update-baseline", action="store_true")
+    tp.set_defaults(fn=cmd_typecheck)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

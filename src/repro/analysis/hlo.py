@@ -1,0 +1,120 @@
+"""HLO inspection: grep compiled programs and rank their largest buffers.
+
+``python -m repro.analysis hlo grep ARCH SHAPE MESH PATTERN [LIMIT]``
+``python -m repro.analysis hlo buffers ARCH SHAPE MESH [--min-bytes N]``
+
+The text analysis (:func:`grep_lines`, :func:`top_buffers`) is pure — unit
+tests feed it HLO text directly; the compile glue (:func:`compile_hlo`)
+reproduces what ``tools/hlo_grep.py`` / ``tools/hlo_top_buffers.py`` did:
+build the production mesh + shardings for an arch/shape cell, lower + compile
+the step, and return the HLO text.  Those two scripts are now shims over
+this module.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+#: bytes per element for the HLO scalar types a buffer line can declare
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+               "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+               "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+#: `%name = f32[8,128]{...} op(...)` — dtype, dims, op
+_BUFFER_RE = re.compile(
+    r"^\s*%?\S+ = (" + "|".join(DTYPE_BYTES) + r")\[([0-9,]+)\][^ ]* (\S+)")
+
+
+def grep_lines(hlo_text: str, pattern: str, limit: int = 20) -> list[str]:
+    """Lines of ``hlo_text`` matching ``pattern`` (regex), stripped and
+    truncated to 240 chars, at most ``limit``."""
+    pat = re.compile(pattern)
+    out: list[str] = []
+    for line in hlo_text.splitlines():
+        if pat.search(line):
+            out.append(line.strip()[:240])
+            if len(out) >= limit:
+                break
+    return out
+
+
+def top_buffers(hlo_text: str, min_bytes: float = 100e6,
+                top: int = 25) -> list[tuple[str, int]]:
+    """The largest buffer groups in ``hlo_text``: identical (op, dtype,
+    shape) allocations above ``min_bytes`` are aggregated; returns
+    ``[(label, total_bytes)]`` biggest first."""
+    sizes: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = _BUFFER_RE.match(line)
+        if not m:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            n *= int(d)
+        b = n * DTYPE_BYTES[m.group(1)]
+        if b > min_bytes:
+            sizes[f"{m.group(3)[:30]} {m.group(1)}[{m.group(2)}]"] += b
+    return sizes.most_common(top)
+
+
+def format_buffers(buffers: list[tuple[str, int]]) -> str:
+    return "\n".join(f"{v / 1e9:8.2f} GB  {k}" for k, v in buffers)
+
+
+def compile_hlo(arch: str, shape: str, meshname: str):
+    """Compile the arch/shape step cell on the production mesh and return
+    ``(hlo_text, compiled)``.  Imports lazily: this path needs the full
+    model/mesh stack and a 512-device host platform."""
+    import os
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import input_specs
+    from repro.parallel import ctx as pctx
+    from repro.parallel import sharding as SH
+
+    mesh = make_production_mesh(multi_pod=(meshname == "multi"))
+    cell = input_specs(arch, shape)
+    in_specs = []
+    for i, a in enumerate(cell.args):
+        if i == 0:
+            in_specs.append(SH.param_specs(a, mesh))
+        elif cell.kind == "train" and i == 1:
+            pspec = SH.param_specs(cell.args[0], mesh)
+            in_specs.append(type(a)(m=pspec, v=pspec,
+                                    count=jax.sharding.PartitionSpec()))
+        elif cell.kind == "decode" and i == 1:
+            in_specs.append(SH.cache_specs(cell.cfg, a, mesh,
+                                           cell.shape.global_batch))
+        elif isinstance(a, dict):
+            in_specs.append(SH.batch_specs(a, mesh))
+        else:
+            in_specs.append(jax.sharding.PartitionSpec())
+    with mesh, pctx.policy(mesh):
+        compiled = jax.jit(
+            cell.step,
+            in_shardings=SH.to_shardings(tuple(in_specs), mesh),
+            donate_argnums=cell.donate).lower(*cell.args).compile()
+    return compiled.as_text(), compiled
+
+
+def main_grep(arch: str, shape: str, meshname: str, pattern: str,
+              limit: int = 20) -> int:
+    hlo, _ = compile_hlo(arch, shape, meshname)
+    for line in grep_lines(hlo, pattern, limit):
+        print(line)
+    return 0
+
+
+def main_buffers(arch: str, shape: str, meshname: str,
+                 min_bytes: float = 100e6) -> int:
+    hlo, compiled = compile_hlo(arch, shape, meshname)
+    print(format_buffers(top_buffers(hlo, min_bytes)))
+    ma = compiled.memory_analysis()
+    print("temp GB:", ma.temp_size_in_bytes / 1e9)
+    return 0
+
+
+__all__ = ["DTYPE_BYTES", "grep_lines", "top_buffers", "format_buffers",
+           "compile_hlo", "main_grep", "main_buffers"]

@@ -1,0 +1,221 @@
+"""Datapath linter: ast rules for the anti-patterns this repo has been
+bitten by.  ``python -m repro.analysis lint [paths...]``.
+
+Rules (subjects are ``path:line``; suppress a line with ``# noqa: L-<ID>``):
+
+  - **L-HOSTSYNC** (error): a host synchronization inside a loop —
+    ``.block_until_ready()``, ``.item()``, ``jax.device_get`` /
+    ``np.asarray`` / ``np.array`` on device values, or ``int()`` /
+    ``float()`` over a subscripted array — each iteration blocks on the
+    device, serializing the loop (the PR-2 throughput lesson: one sync per
+    run, not per item).
+  - **L-JITCACHE** (error): ``jax.jit(...)`` called inside a loop — every
+    iteration makes a fresh jit instance with an empty compile cache, so
+    the program retraces per iteration instead of once.
+  - **L-DONATE** (warning): a ``jax.jit`` call without ``donate_argnums``
+    in a dispatch-path file — the output allocates new buffers while the
+    dead inputs pin theirs, doubling peak memory on the hot path.
+  - **L-NONDET** (warning): nondeterminism hazards inside the event-sim
+    core (``src/repro/core/``) — wall-clock reads or unseeded global
+    randomness break replayable simulation.
+
+Detection is lexical ast walking, scoped tight enough to run clean on a
+well-behaved tree: loop-sensitive rules only fire under a ``for`` /
+``while`` / comprehension; ``int()``/``float()`` only over a *subscript*
+of a name the enclosing function never touched with ``np.`` (heuristic:
+flagged only in files importing jax); L-DONATE only in files whose path
+matches a dispatch component (``backend``, ``engine``, ``kernels``).
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from .diagnostics import Diagnostic, Severity
+
+#: attribute calls that force a host<->device sync
+_SYNC_ATTRS = ("block_until_ready", "item")
+#: module calls that materialize a device value on the host
+_SYNC_CALLS = {("jax", "device_get"), ("np", "asarray"), ("np", "array"),
+               ("numpy", "asarray"), ("numpy", "array")}
+#: wall-clock / unseeded-randomness calls banned in the event-sim core
+_NONDET_CALLS = {("time", "time"), ("time", "perf_counter"),
+                 ("time", "monotonic"), ("datetime", "now"),
+                 ("random", "random"), ("random", "randint"),
+                 ("random", "uniform"), ("random", "choice"),
+                 ("random", "shuffle"), ("random", "sample")}
+#: path fragments that mark a file as dispatch-path for L-DONATE
+_DISPATCH_HINTS = ("backend", "engine", "kernels", "serving")
+
+
+def _is_sync_subscript(node: ast.Subscript) -> bool:
+    """True when ``int(x[...])`` plausibly reads a device array element:
+    the subscripted value is a plain name/attribute chain that is not a
+    ``.shape``-style metadata read.  Subscripts of call results
+    (``x.split("_")[1]``) are host values, not array indexing."""
+    if isinstance(node.value, ast.Attribute) \
+            and node.value.attr in ("shape", "dims", "strides"):
+        return False
+    return isinstance(node.value, (ast.Name, ast.Attribute))
+
+
+def _imports_jax(tree: ast.AST) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            if any(a.name == "jax" or a.name.startswith("jax.")
+                   for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and (node.module == "jax"
+                                or node.module.startswith("jax.")):
+                return True
+    return False
+
+
+def _dotted(node) -> tuple[str, ...] | None:
+    """x.y.z -> ("x", "y", "z") for Name/Attribute chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, relpath: str, in_core: bool, is_jax_file: bool):
+        self.relpath = relpath
+        self.in_core = in_core
+        self.is_jax_file = is_jax_file
+        self.loop_depth = 0
+        self.diags: list[Diagnostic] = []
+
+    # ------------------------------------------------------------- helpers --
+    def _emit(self, rule: str, severity: str, node: ast.AST, message: str,
+              hint: str) -> None:
+        self.diags.append(Diagnostic(
+            rule, severity, f"{self.relpath}:{node.lineno}", message, hint))
+
+    def _in_loop(self) -> bool:
+        return self.loop_depth > 0
+
+    # --------------------------------------------------------------- loops --
+    def _loop(self, node) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = visit_While = visit_AsyncFor = _loop
+    visit_ListComp = visit_SetComp = visit_DictComp = _loop
+    visit_GeneratorExp = _loop
+
+    # --------------------------------------------------------------- calls --
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+
+        if self._in_loop():
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _SYNC_ATTRS):
+                self._emit(
+                    "L-HOSTSYNC", Severity.ERROR, node,
+                    f".{node.func.attr}() inside a loop blocks on the "
+                    "device every iteration",
+                    "hoist the sync out of the loop: batch the values and "
+                    "synchronize once after it")
+            elif dotted and (dotted[0], dotted[-1]) in _SYNC_CALLS \
+                    and self.is_jax_file:
+                self._emit(
+                    "L-HOSTSYNC", Severity.ERROR, node,
+                    f"{'.'.join(dotted)}() inside a loop pulls a device "
+                    "value to the host every iteration",
+                    "stack device-side per-iteration results and convert "
+                    "once after the loop")
+            elif dotted in ((("int",), ("float",))) and node.args \
+                    and isinstance(node.args[0], ast.Subscript) \
+                    and _is_sync_subscript(node.args[0]) \
+                    and self.is_jax_file:
+                self._emit(
+                    "L-HOSTSYNC", Severity.ERROR, node,
+                    f"{dotted[0]}(x[...]) inside a loop forces the array "
+                    "element to the host every iteration",
+                    "keep per-iteration results device-side; transfer the "
+                    "stacked batch once after the loop")
+            if dotted and dotted[:2] == ("jax", "jit"):
+                self._emit(
+                    "L-JITCACHE", Severity.ERROR, node,
+                    "jax.jit(...) inside a loop creates a fresh jit "
+                    "instance (empty compile cache) every iteration",
+                    "jit once outside the loop, or memoize per static "
+                    "shape like the bucketed compile cache does")
+
+        if dotted and dotted[:2] == ("jax", "jit") and not self._in_loop() \
+                and not any(kw.arg == "donate_argnums"
+                            for kw in node.keywords) \
+                and any(h in self.relpath for h in _DISPATCH_HINTS):
+            self._emit(
+                "L-DONATE", Severity.WARNING, node,
+                "jax.jit without donate_argnums on the dispatch path: dead "
+                "input buffers stay pinned while outputs allocate fresh "
+                "ones",
+                "donate consumed inputs (donate_argnums=...); if no output "
+                "aliases an input, say why with a noqa")
+
+        if self.in_core and dotted \
+                and (dotted[0], dotted[-1]) in _NONDET_CALLS:
+            self._emit(
+                "L-NONDET", Severity.WARNING, node,
+                f"{'.'.join(dotted)}() in the event-sim core: wall-clock "
+                "or unseeded randomness makes simulation unreplayable",
+                "thread a seeded random.Random(seed) / injected clock "
+                "through instead")
+
+        self.generic_visit(node)
+
+
+def lint_source(source: str, relpath: str) -> list[Diagnostic]:
+    """Lint one file's source text; returns its diagnostics after noqa
+    filtering."""
+    try:
+        tree = ast.parse(source, filename=relpath)
+    except SyntaxError as e:
+        return [Diagnostic(
+            "L-SYNTAX", Severity.ERROR, f"{relpath}:{e.lineno or 0}",
+            f"file does not parse: {e.msg}", hint="fix the syntax error")]
+    norm = relpath.replace(os.sep, "/")
+    v = _Visitor(norm,
+                 in_core="repro/core/" in norm,
+                 is_jax_file=_imports_jax(tree))
+    v.visit(tree)
+    lines = source.splitlines()
+    out = []
+    for d in v.diags:
+        lineno = int(d.subject.rsplit(":", 1)[1])
+        line = lines[lineno - 1] if 0 < lineno <= len(lines) else ""
+        if "# noqa" in line and d.rule in line.split("# noqa", 1)[1]:
+            continue
+        out.append(d)
+    return out
+
+
+def lint_paths(paths: list[str], root: str = ".") -> list[Diagnostic]:
+    """Lint every ``.py`` file under the given files/directories; subjects
+    are ``root``-relative paths."""
+    files: list[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, _dirs, names in os.walk(p):
+                files.extend(os.path.join(dirpath, n)
+                             for n in sorted(names) if n.endswith(".py"))
+        else:
+            files.append(p)
+    diags: list[Diagnostic] = []
+    for f in sorted(files):
+        with open(f, encoding="utf-8") as fh:
+            src = fh.read()
+        diags.extend(lint_source(src, os.path.relpath(f, root)))
+    return diags
+
+
+__all__ = ["lint_paths", "lint_source"]

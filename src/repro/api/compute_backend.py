@@ -67,9 +67,12 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import invariants as _sanitize
 from repro.core.nt import GBPS, NTDag, NTSpec
 from repro.core.sched import FairScheduler, SchedConfig
+from repro.kernels.chacha20.ops import vmem_tile_bytes as _chacha_tile
 from repro.kernels.vpc_datapath import vpc_datapath
+from repro.kernels.vpc_datapath.ops import vmem_tile_bytes as _vpc_tile
 from repro.serving.vpc import chacha20_xor_jnp, firewall, nat_rewrite
 
 from .backend import PlatformReport, TenantReport
@@ -104,12 +107,24 @@ class ComputeNT:
     cannot change the NT's output for any real packet; ``prep_fields``
     names them, so inject can skip ``prep`` when the caller already
     supplied every one.
+
+    The remaining fields are admission-verifier metadata
+    (:mod:`repro.analysis.verifier`), all optional: ``reads`` declares the
+    state fields ``fn`` consumes so dataflow holes surface at deploy time;
+    ``schema`` pins per-field trailing shape and dtype as
+    ``((field, trailing_shape, dtype), ...)`` tuples (hashable, so the
+    dataclass stays frozen-hashable) so shape breaks along an edge are
+    static errors; ``tile_bytes`` is the NT kernel's worst-case VMEM tile
+    residency, summed per fused branch against the per-core budget.
     """
     name: str
     fn: Callable[[dict, dict], dict]
     writes: tuple[str, ...]
     prep: Callable[[int, dict], dict] | None = None
     prep_fields: tuple[str, ...] = ()
+    reads: tuple[str, ...] = ()
+    schema: tuple[tuple[str, tuple[int, ...], str], ...] = ()
+    tile_bytes: int = 0
 
 
 # ------------------------------------------------------- built-in NT library --
@@ -137,10 +152,21 @@ def _chacha_prep(n, params):
 
 
 BUILTIN_COMPUTE_NTS: dict[str, ComputeNT] = {
-    "firewall": ComputeNT("firewall", _fw_nt, writes=("allow",)),
-    "nat": ComputeNT("nat", _nat_nt, writes=("headers",)),
-    "chacha20": ComputeNT("chacha20", _chacha_nt, writes=("payload",),
-                          prep=_chacha_prep, prep_fields=("ctr",)),
+    "firewall": ComputeNT(
+        "firewall", _fw_nt, writes=("allow",), reads=("headers",),
+        schema=(("headers", (5,), "uint32"), ("allow", (), "bool")),
+        # fused-kernel share: header tile + rule rows + verdict tile
+        tile_bytes=_vpc_tile() - _chacha_tile(block_n=256)),
+    "nat": ComputeNT(
+        "nat", _nat_nt, writes=("headers",), reads=("headers",),
+        schema=(("headers", (5,), "uint32"),),
+        tile_bytes=4 * 256 * (5 + 5)),       # header tile in + out
+    "chacha20": ComputeNT(
+        "chacha20", _chacha_nt, writes=("payload",),
+        reads=("payload", "ctr"),
+        schema=(("payload", (16,), "uint32"), ("ctr", (), "uint32")),
+        prep=_chacha_prep, prep_fields=("ctr",),
+        tile_bytes=_chacha_tile(block_n=256)),
 }
 
 # nominal service models for the same NT names on the sim substrate, so one
@@ -302,6 +328,10 @@ class ComputeBackend:
         self._elapsed_s = 0.0
         self.stats = {"traces": 0, "dispatches": 0, "fused_dispatches": 0,
                       "batches": 0, "coalesced_batches": 0, "runs": 0}
+        #: batches fully dispatched + synced (I-BATCH conservation: this +
+        #: sched.pending() == stats["batches"]); kept out of ``stats`` so
+        #: report().extra is unchanged
+        self.completed_batches = 0
 
     @property
     def tenants(self) -> dict[str, float]:
@@ -385,7 +415,9 @@ class ComputeBackend:
 
         if self.donate:
             return jax.jit(traced, donate_argnums=0)
-        return jax.jit(traced)
+        # donate=False is an explicit debugging escape hatch (keep inputs
+        # alive to diff against outputs); not a dispatch-path oversight
+        return jax.jit(traced)  # noqa: L-DONATE
 
     def _get_program(self, dep: _Deployment, bucket: int,
                      path: str) -> Callable:
@@ -539,6 +571,9 @@ class ComputeBackend:
                 off += s
         for _, dep, res in sorted(split, key=lambda t: t[0]):
             dep.results.append(res)       # results stay in inject order
+        self.completed_batches += len(enq_at)
+        if _sanitize.enabled():           # end-of-drain conservation audit
+            _sanitize.check_compute(self, self.name)
 
     # ------------------------------------------------------------- report --
     def report(self) -> PlatformReport:

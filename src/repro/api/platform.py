@@ -60,14 +60,28 @@ class Tenant:
     weight: float = 1.0
     deployments: list[Deployment] = field(default_factory=list)
 
-    def deploy(self, dag: DagExpr | NTDag | str, **kw) -> Deployment:
-        """Compile + validate a builder expression and hand it to the
-        backend.  Backend-specific keywords pass through (``params=`` for
-        compute, ``prelaunch=`` for sim)."""
+    def deploy(self, dag: DagExpr | NTDag | str,
+               strict: bool | None = None, **kw) -> Deployment:
+        """Compile + validate a builder expression, run it through the
+        admission verifier, and hand it to the backend.  Backend-specific
+        keywords pass through (``params=`` for compute, ``prelaunch=`` for
+        sim).  ``strict`` overrides the platform-wide admission mode for
+        this deploy: strict admission raises
+        :class:`~repro.analysis.verifier.AdmissionError` on any
+        error-severity diagnostic; warn-only admission records everything
+        in ``platform.admission_log`` and deploys anyway."""
+        # local import: repro.analysis imports repro.api.dag at module
+        # level, so importing it here (not at module scope) breaks the cycle
+        from repro.analysis.verifier import admit
         ntdag = compile_dag(
             dag, uid=self.platform._next_uid(), tenant=self.name,
             specs=self.platform.specs or None,
             region_slots=getattr(self.platform.backend, "region_slots", None))
+        diags = admit(
+            ntdag, self.name, backend=self.platform.backend,
+            specs=self.platform.specs or None,
+            strict=self.platform.strict if strict is None else strict)
+        self.platform.admission_log.extend(diags)
         self.platform.backend.deploy(ntdag, **kw)
         dep = Deployment(ntdag, self)
         self.deployments.append(dep)
@@ -101,7 +115,8 @@ class Platform:
     """
 
     def __init__(self, backend: Backend | list[Backend] | tuple,
-                 specs: dict[str, NTSpec] | list[NTSpec] | None = None):
+                 specs: dict[str, NTSpec] | list[NTSpec] | None = None,
+                 strict: bool = True):
         if isinstance(backend, (list, tuple)):
             from .sharded_backend import ShardedBackend
             backend = ShardedBackend(list(backend))
@@ -109,6 +124,11 @@ class Platform:
         self.specs: dict[str, NTSpec] = {}
         self.tenants: dict[str, Tenant] = {}
         self._uid = 0
+        #: admission mode: strict deploys reject on error diagnostics;
+        #: strict=False is the warn-only migration mode — everything the
+        #: verifier finds lands in ``admission_log`` either way
+        self.strict = strict
+        self.admission_log: list = []
         if specs:
             vals = specs.values() if isinstance(specs, dict) else specs
             self.register(*vals)

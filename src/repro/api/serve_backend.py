@@ -16,7 +16,11 @@ from .dag import DagError
 
 # nominal service models so the same names validate on the sim substrate
 SERVE_SPECS: dict[str, NTSpec] = {
-    "cache": NTSpec("cache", max_gbps=100.0, fixed_ns=200.0),
+    # the response cache is ONE engine-wide pool every tenant's chain reads
+    # through — stateful, and deliberately shared (the verifier's
+    # V-ISOLATION rule exempts shared=True specs)
+    "cache": NTSpec("cache", max_gbps=100.0, fixed_ns=200.0,
+                    state_bytes=8 << 20, shared=True),
     "prefill": NTSpec("prefill", max_gbps=20.0, fixed_ns=5000.0),
     "decode": NTSpec("decode", max_gbps=10.0, fixed_ns=2000.0),
 }

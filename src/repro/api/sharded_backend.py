@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import math
 
+from repro.analysis import invariants as _sanitize
 from repro.core.nt import NTDag, NTSpec
 from repro.core.sched import cross_shard_epoch
 
@@ -107,8 +108,9 @@ class ShardedBackend:
         self.last_demands: dict = {}
         self._epoch_count = 0
         for s in self.shards:
-            if hasattr(s, "defer_epochs"):
-                s.defer_epochs()     # the fleet epoch owns space sharing now
+            defer = getattr(s, "defer_epochs", None)
+            if defer is not None:
+                defer()              # the fleet epoch owns space sharing now
 
     # --------------------------------------------------------------- misc --
     @staticmethod
@@ -169,16 +171,18 @@ class ShardedBackend:
         migrates, the source's traffic follows the routing table instead of
         staying glued to the shard it was attached on."""
         shard = self.shard_of(dag_uid)
-        if not hasattr(shard, "add_source"):
+        add_source = getattr(shard, "add_source", None)
+        if add_source is None:
             raise NotImplementedError(
                 f"shard {shard.name!r} has no traffic sources")
         kw.setdefault("sink", self.inject)
-        shard.add_source(kind, tenant, dag_uid, **kw)
+        add_source(kind, tenant, dag_uid, **kw)
 
     def settle(self) -> None:
         for s in self.shards:
-            if hasattr(s, "settle"):
-                s.settle()
+            settle = getattr(s, "settle", None)
+            if settle is not None:
+                settle()
 
     # ---------------------------------------------------------- migration --
     def migrate(self, dag_uid: int, dst: int) -> bool:
@@ -234,10 +238,10 @@ class ShardedBackend:
         wsum = sum(self.tenant_weights.values()) or 1.0
         caps = self._shard_window_caps(window_ns)
         for i, s in enumerate(self.shards):
-            if _is_event(s) and hasattr(s, "apply_grants"):
-                s.apply_grants({t: caps[i] * w / wsum
-                                for t, w in self.tenant_weights.items()},
-                               window_ns)
+            apply = getattr(s, "apply_grants", None) if _is_event(s) else None
+            if apply is not None:
+                apply({t: caps[i] * w / wsum
+                       for t, w in self.tenant_weights.items()}, window_ns)
 
     def _global_epoch(self, window_ns: float | None,
                       shards: set[int] | None = None) -> None:
@@ -289,11 +293,26 @@ class ShardedBackend:
         for i, sched in scheds.items():
             sched.end_window()
             shard = self.shards[i]
-            if window_ns is not None and hasattr(shard, "apply_grants"):
-                shard.apply_grants(grants.get(i, {}), window_ns)
+            apply = getattr(shard, "apply_grants", None)
+            if window_ns is not None and apply is not None:
+                apply(grants.get(i, {}), window_ns)
         self.last_demands = demands
         self.last_grants = grants
         self.global_epochs += 1
+        if _sanitize.enabled():   # fleet-wide conservation at the global
+            self._sanitize_shards()  # epoch boundary
+
+    def _sanitize_shards(self) -> None:
+        """Run the invariant harness across every shard: packet conservation
+        sums over ALL event shards' sNICs (rack forwarding completes packets
+        on peers), plus per-shard scheduler/queue laws."""
+        snics = [sn for s in self.shards for sn in getattr(s, "snics", ())]
+        if snics:
+            _sanitize.check_fleet(snics, f"{self.name}/fleet")
+        for i, s in enumerate(self.shards):
+            sched = _sched_of(s)
+            if sched is not None and not hasattr(s, "snics"):
+                _sanitize.check_scheduler(sched, f"{self.name}/shard{i}")
 
     # ---------------------------------------------------------------- run --
     def run(self, duration_ms: float | None = None,

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from repro.analysis import invariants as _sanitize
 from repro.core.distributed import Rack
 from repro.core.nt import NTDag, NTSpec
 from repro.core.sim import (EventSim, FlowStats, fb_kv_source, onoff_source,
@@ -169,6 +170,8 @@ class SimBackend:
         self.sim.run(self.sim.now + self.snic.cfg.pr_ns + 1)
         self._t0 = None
         self._elapsed_ns = 0.0
+        if _sanitize.enabled():
+            _sanitize.check_fleet(self.snics, f"{self.name}/settle")
 
     def run(self, duration_ms: float | None = None,
             duration_ns: float | None = None, settle: bool = False,
@@ -185,6 +188,8 @@ class SimBackend:
             self._t0 = self.sim.now
         self.sim.run(self.sim.now + duration_ns)
         self._elapsed_ns = self.sim.now - self._t0
+        if _sanitize.enabled():      # end-of-window conservation audit
+            _sanitize.check_fleet(self.snics, f"{self.name}/run")
 
     def report(self) -> PlatformReport:
         dur = max(self._elapsed_ns, 1.0)

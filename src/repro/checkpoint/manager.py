@@ -47,7 +47,9 @@ class CheckpointManager:
         """Snapshot ``tree`` at ``step``.  Device->host happens now; file
         writes happen async (pass block=True to wait)."""
         leaves, treedef = _flatten(tree)
-        host = [np.asarray(x) for x in leaves]       # gathers logical value
+        # the checkpoint boundary IS the device->host gather; one snapshot
+        # per save, not a per-dispatch sync
+        host = [np.asarray(x) for x in leaves]  # noqa: L-HOSTSYNC
         meta = {"step": step, "n_leaves": len(host),
                 "treedef": str(treedef),
                 "extra": extra or {}}

@@ -30,6 +30,9 @@ class NTSpec:
     needs_payload: bool = False      # must fetch payload from packet store
     state_bytes: int = 0             # on-board memory footprint (vmem)
     bitstream_bytes: int = 4 << 20   # ~4 MB (paper: <5 MB)
+    shared: bool = False             # stateful NT usable across tenants
+    #                                  (opt-out of the §3 isolation rule;
+    #                                  e.g. an engine-wide KV cache pool)
 
     @property
     def ns_per_byte(self) -> float:

@@ -56,6 +56,11 @@ class TenantQueue:
     last_refill: float = 0.0
     # monitors
     drops: int = 0
+    #: cost accepted into the queue (drops excluded); the conservation law
+    #: the sanitizer checks is granted == served + backlog.  push_front does
+    #: NOT add here: a requeue pairs with a pop whose served_cost the
+    #: scheduler reverses, so the law already balances.
+    granted_cost: float = 0.0
     served_cost: float = 0.0
     served_items: int = 0
     #: WDRR deficit counter (owned by timeshare.DeficitRoundRobin)
@@ -74,6 +79,7 @@ class TenantQueue:
             return False
         self.items.append(QueueItem(payload, cost, costs, now))
         self.backlog_cost += cost
+        self.granted_cost += cost
         return True
 
     def push_front(self, payload, cost: float, costs: dict | None = None,

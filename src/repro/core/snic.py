@@ -24,6 +24,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.analysis import invariants as _sanitize
+
 from .nt import ChainProgram, NTDag, NTInstance, NTSpec, Packet, enumerate_programs
 from .policy import UtilizationScaler
 from .regions import LaunchResult, Region, RegionManager, RegionState
@@ -472,6 +474,8 @@ class SNIC:
         solver's 3 us runtime and re-pumps the paced queues."""
         if not self.cfg.enable_drf:
             return          # loop handed off (e.g. to a cross-shard epoch)
+        if _sanitize.enabled():       # opt-in epoch-boundary sanitizer
+            _sanitize.check_snic(self, f"snic@{self.sim.now:.0f}ns")
         res = self.sched.epoch(
             self._capacities(),
             # standing backlog counts as ingress demand on top of the

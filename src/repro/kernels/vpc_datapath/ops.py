@@ -24,6 +24,17 @@ def _popcount32(masks):
     return (x * jnp.uint32(0x01010101)) >> jnp.uint32(24)
 
 
+def vmem_tile_bytes(block_n: int = 256, n_rules: int = 64) -> int:
+    """Worst-case VMEM residency of one grid step, from the kernel's
+    BlockSpecs: per-tile headers/payload/ctr inputs, the four broadcast
+    rule rows, key/nonce/nat_ip scalars, and the three output tiles — all
+    u32.  The admission verifier sums this per fused branch against
+    ``core.vmem.VMEM_BUDGET_BYTES``."""
+    per_row = 5 + 16 + 1 + 1 + 5 + 16        # in: hdr,pl,ctr; out: allow,hdr,pl
+    broadcast = 4 * n_rules + 8 + 3 + 1      # rule rows + key + nonce + nat_ip
+    return 4 * (block_n * per_row + broadcast)
+
+
 def vpc_datapath(headers, payload, rules, key, nonce,
                  nat_ip: int = 0x0A000001, counter0: int = 1, ctr=None,
                  salt: int = 0x9e3779b9, block_n: int = 256,

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import invariants as _sanitize
 from repro.core.policy import StepScaler
 from repro.core.sched import FairScheduler, SchedConfig, SpaceShare
 from repro.core.vmem import OutOfMemory, VirtualMemory
@@ -134,10 +135,15 @@ class Engine:
         if bs not in store:                       # "PR": compile a region
             t0 = time.time()
             if kind == "decode":
+                # the KV cache (arg 1) is consumed and replaced every step:
+                # donating it lets XLA update pages in place instead of
+                # holding old + new cache live across each decode dispatch
                 fn = jax.jit(lambda p, c, b, t: MD.apply_decode(
-                    p, self.cfg, c, b, t))
+                    p, self.cfg, c, b, t), donate_argnums=1)
             else:
-                fn = jax.jit(lambda p, b: MD.apply_prefill(
+                # no prefill output aliases the token batch, so there is
+                # nothing to donate into
+                fn = jax.jit(lambda p, b: MD.apply_prefill(  # noqa: L-DONATE
                     p, self.cfg, b, max_len=self.ecfg.max_len))
             store[bs] = fn
             self.compile_log.append((kind, bs, time.time() - t0))
@@ -244,6 +250,8 @@ class Engine:
         for i in range(0, len(todo), self.active_bs):
             group = todo[i:i + self.active_bs]
             self._generate(group)
+        if _sanitize.enabled():     # per-iteration conservation audit
+            _sanitize.check_engine(self, "engine")
         return len(batch)
 
     def _generate(self, group: list[Request]):
@@ -261,19 +269,19 @@ class Engine:
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         t_first = time.time()
         max_new = max(r.max_new for r in group)
-        outs = [[] for _ in group]
-        for step_i in range(max_new):
-            for j, r in enumerate(group):
-                if step_i < r.max_new:
-                    outs[j].append(int(tok[j]))
-            if step_i == max_new - 1:
-                break
+        # the decode loop stays device-side: per-step tokens accumulate as
+        # device arrays and cross to the host ONCE after the loop — int(tok[j])
+        # per step would block on the whole decode chain every iteration
+        toks = [tok]
+        for step_i in range(max_new - 1):
             logits, cache = decode(self.params, cache,
                                    {"tokens": tok[:, None]},
                                    jnp.int32(S + step_i))
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            toks.append(tok)
+        steps = np.asarray(jnp.stack(toks, axis=1))    # (bs, max_new), 1 sync
         for j, r in enumerate(group):
-            r.out = outs[j]
+            r.out = [int(t) for t in steps[j, :r.max_new]]
             r.t_first = t_first
             r.t_done = time.time()
             if self.ecfg.enable_cache_nt:

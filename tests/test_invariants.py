@@ -1,0 +1,204 @@
+"""Runtime invariant harness: the sanitizer's conservation laws, both as
+direct unit checks and end-to-end with ``REPRO_SANITIZE=1`` over the
+fairness / sharding / compute / serving suites' scenarios."""
+import numpy as np
+import pytest
+
+from repro.analysis import invariants as inv
+from repro.api import Platform, ShardedBackend, SimBackend, VPC_SPECS
+from repro.api.dag import nt
+from repro.core.sched import FairScheduler, SchedConfig
+from repro.core.vmem import VirtualMemory
+
+pytestmark = pytest.mark.invariants
+
+
+@pytest.fixture
+def sanitize(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert inv.enabled()
+
+
+# ======================================================== scheduler laws ====
+class TestSchedulerLaws:
+    def _sched(self):
+        return FairScheduler({"a": 2.0, "b": 1.0},
+                             SchedConfig(quantum=1000.0))
+
+    def test_submit_drain_conserves(self):
+        s = self._sched()
+        for i in range(5):
+            s.submit("a", f"pkt{i}", 100.0)
+            s.submit("b", f"pkt{i}", 50.0)
+        assert inv.scheduler_diags(s, "t") == []
+        list(s.drain())
+        assert inv.scheduler_diags(s, "t") == []
+        qa = s.queues["a"]
+        assert qa.granted_cost == pytest.approx(qa.served_cost)
+
+    def test_requeue_conserves(self):
+        s = self._sched()
+        s.submit("a", "p", 100.0)
+        [(t, item)] = list(s.drain())
+        s.requeue(t, item.payload, item.cost)
+        assert inv.scheduler_diags(s, "t") == []
+        list(s.drain())
+        assert inv.scheduler_diags(s, "t") == []
+
+    def test_drops_not_granted(self):
+        s = FairScheduler({"a": 1.0},
+                          SchedConfig(max_backlog=150.0))
+        assert s.submit("a", "p1", 100.0)
+        assert not s.submit("a", "p2", 100.0)      # over the cap: dropped
+        assert inv.scheduler_diags(s, "t") == []
+        assert s.queues["a"].granted_cost == 100.0
+
+    def test_credit_leak_detected(self):
+        s = self._sched()
+        s.submit("a", "p", 100.0)
+        s.queues["a"].granted_cost += 7.0          # corrupt the books
+        diags = inv.scheduler_diags(s, "t")
+        assert [d.rule for d in diags] == ["I-CREDIT"]
+        with pytest.raises(inv.InvariantViolation):
+            inv.check_scheduler(s, "t")
+
+    def test_negative_deficit_detected(self):
+        s = self._sched()
+        s.queues["b"].deficit = -1.0
+        assert [d.rule for d in inv.scheduler_diags(s, "t")] == ["I-DEFICIT"]
+
+
+# ============================================================= vmem laws ====
+class TestVmemLaws:
+    def test_clean_vm(self):
+        vm = VirtualMemory(8 << 20, page_bytes=1 << 20)
+        vm.register("nt0")
+        for i in range(4):
+            vm.access("nt0", i, float(i))
+        assert inv.vmem_diags(vm, "vm") == []
+        vm.release("nt0")
+        assert inv.vmem_diags(vm, "vm") == []
+
+    def test_oversubscription_swap_stays_clean(self):
+        vm = VirtualMemory(2 << 20, page_bytes=1 << 20)
+        vm.register("nt0")
+        for i in range(6):                          # 6 pages, 2 frames
+            vm.access("nt0", i, float(i))
+        assert vm.swapped_pages > 0
+        assert inv.vmem_diags(vm, "vm") == []
+
+    def test_frame_leak_detected(self):
+        vm = VirtualMemory(4 << 20, page_bytes=1 << 20)
+        vm.register("nt0")
+        vm.access("nt0", 0, 0.0)
+        vm.free_frames.pop()                        # lose a frame
+        assert any(d.rule == "I-VMEM" for d in inv.vmem_diags(vm, "vm"))
+
+    def test_stale_owner_detected(self):
+        vm = VirtualMemory(4 << 20, page_bytes=1 << 20)
+        vm.register("nt0")
+        vm.access("nt0", 0, 0.0)
+        frame = next(iter(vm.frame_owner))
+        vm.frame_owner[frame] = ("nt0", 99)         # wrong page
+        assert any(d.rule == "I-VMEM" for d in inv.vmem_diags(vm, "vm"))
+
+
+# ===================================================== end-to-end: the sim ====
+class TestSimSanitized:
+    def test_fairness_scenario(self, sanitize):
+        plat = Platform(SimBackend(specs=VPC_SPECS), specs=VPC_SPECS)
+        a = plat.tenant("alice", weight=3.0)
+        b = plat.tenant("bob", weight=1.0)
+        da = a.deploy(nt("firewall") >> nt("nat") >> nt("chacha20"))
+        db = b.deploy(nt("firewall") >> nt("nat"))
+        for _ in range(200):
+            plat.backend.inject("alice", da.uid, 1500)
+            plat.backend.inject("bob", db.uid, 1000)
+        plat.run(duration_ms=2.0, settle=True)      # hooks run every epoch
+        rep = plat.report()
+        assert rep["alice"].pkts_done > 0
+
+    def test_rack_scenario(self, sanitize):
+        plat = Platform(SimBackend(specs=VPC_SPECS, n_snics=3),
+                        specs=VPC_SPECS)
+        t = plat.tenant("alice")
+        d = t.deploy(nt("firewall") >> nt("chacha20"))
+        for _ in range(150):
+            plat.backend.inject("alice", d.uid, 1200)
+        plat.run(duration_ms=2.0, settle=True)
+
+    def test_packet_conservation_violation_detected(self, sanitize):
+        be = SimBackend(specs=VPC_SPECS)
+        plat = Platform(be, specs=VPC_SPECS)
+        t = plat.tenant("alice")
+        d = t.deploy(nt("firewall"))
+        for _ in range(10):
+            plat.backend.inject("alice", d.uid, 1000)
+        plat.run(duration_ms=1.0)
+        be.snic.stats["alice"].pkts_done += 1000    # fake extra deliveries
+        with pytest.raises(inv.InvariantViolation) as ei:
+            plat.run(duration_ms=0.1)
+        assert any(d.rule == "I-PKTS" for d in ei.value.diagnostics)
+
+
+# ================================================ end-to-end: sharded fleet ====
+class TestShardedSanitized:
+    def test_sharding_scenario(self, sanitize):
+        plat = Platform(ShardedBackend(
+            [SimBackend(name="s0", specs=VPC_SPECS),
+             SimBackend(name="s1", specs=VPC_SPECS)]), specs=VPC_SPECS)
+        a = plat.tenant("alice", weight=2.0)
+        b = plat.tenant("bob")
+        da = a.deploy(nt("firewall") >> nt("nat"))
+        db = b.deploy(nt("firewall"))
+        for _ in range(120):
+            plat.backend.inject("alice", da.uid, 1500)
+            plat.backend.inject("bob", db.uid, 800)
+        plat.run(duration_ms=2.0)
+        assert plat.backend.global_epochs > 0       # hooks actually fired
+
+
+# ====================================================== end-to-end: compute ====
+class TestComputeSanitized:
+    def test_vpc_batches_conserve(self, sanitize):
+        import jax.numpy as jnp
+
+        from repro.api import ComputeBackend
+        from repro.serving.vpc import make_packets, make_rules
+        be = ComputeBackend(use_fused=False)
+        plat = Platform(be, specs=VPC_SPECS)
+        dep = plat.tenant("alice").deploy(
+            nt("firewall") >> nt("nat") >> nt("chacha20"),
+            params={"firewall": {"rules": make_rules(16, seed=0)},
+                    "nat": {"nat_ip": 0x0A000001},
+                    "chacha20": {"key": jnp.arange(8, dtype=jnp.uint32),
+                                 "nonce": jnp.arange(3, dtype=jnp.uint32)}})
+        h, p = make_packets(64, seed=3)
+        for _ in range(3):
+            dep.inject(headers=h, payload=p)
+        plat.run()
+        assert be.completed_batches == 3
+        assert inv.compute_diags(be, "compute") == []
+
+    def test_batch_leak_detected(self, sanitize):
+        from repro.api import ComputeBackend
+        be = ComputeBackend(use_fused=False)
+        be.stats["batches"] += 1                     # phantom inject
+        assert any(d.rule == "I-BATCH"
+                   for d in inv.compute_diags(be, "compute"))
+
+
+# ======================================================= end-to-end: engine ====
+class TestEngineSanitized:
+    def test_serving_scenario(self, sanitize):
+        from repro import configs
+        from repro.serving.engine import Engine, EngineConfig
+        eng = Engine(configs.get_tiny_config("yi-6b"),
+                     EngineConfig(batch_sizes=(1, 2), max_len=32,
+                                  mem_pages=8))
+        for i in range(6):
+            eng.submit("a" if i % 2 else "b",
+                       np.arange(3 + i) % 11, max_new=4)
+        eng.run_until_drained(30)                   # hooks run every step
+        assert len(eng.done) == 6
+        assert inv.vmem_diags(eng.vmem, "kv") == []

@@ -1,35 +1,13 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-import re, sys
-import jax
-from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import input_specs
-from repro.parallel import sharding as SH, ctx as pctx
+"""Shim: the HLO tooling lives in repro.analysis.hlo now.
 
-arch, shape, meshname, pattern = sys.argv[1], sys.argv[2], sys.argv[3], sys.argv[4]
-mesh = make_production_mesh(multi_pod=(meshname == "multi"))
-cell = input_specs(arch, shape)
-in_specs = []
-for i, a in enumerate(cell.args):
-    if i == 0:
-        in_specs.append(SH.param_specs(a, mesh))
-    elif cell.kind == "train" and i == 1:
-        pspec = SH.param_specs(cell.args[0], mesh)
-        in_specs.append(type(a)(m=pspec, v=pspec, count=jax.sharding.PartitionSpec()))
-    elif cell.kind == "decode" and i == 1:
-        in_specs.append(SH.cache_specs(cell.cfg, a, mesh, cell.shape.global_batch))
-    elif isinstance(a, dict):
-        in_specs.append(SH.batch_specs(a, mesh))
-    else:
-        in_specs.append(jax.sharding.PartitionSpec())
-with mesh, pctx.policy(mesh):
-    compiled = jax.jit(cell.step, in_shardings=SH.to_shardings(tuple(in_specs), mesh),
-                       donate_argnums=cell.donate).lower(*cell.args).compile()
-hlo = compiled.as_text()
-pat = re.compile(pattern)
-n = 0
-for line in hlo.splitlines():
-    if pat.search(line):
-        print(line.strip()[:240])
-        n += 1
-        if n >= int(sys.argv[5] if len(sys.argv) > 5 else 20): break
+    PYTHONPATH=src python tools/hlo_grep.py ARCH SHAPE MESH PATTERN [LIMIT]
+    (same as: python -m repro.analysis hlo grep ...)
+"""
+import sys
+
+from repro.analysis.hlo import main_grep
+
+if __name__ == "__main__":
+    arch, shape, mesh, pattern = sys.argv[1:5]
+    limit = int(sys.argv[5]) if len(sys.argv) > 5 else 20
+    raise SystemExit(main_grep(arch, shape, mesh, pattern, limit))

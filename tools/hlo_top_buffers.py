@@ -1,43 +1,12 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-import re, sys, collections
-import jax
-from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import input_specs
-from repro.parallel import sharding as SH, ctx as pctx
+"""Shim: the HLO tooling lives in repro.analysis.hlo now.
 
-arch, shape, meshname = sys.argv[1], sys.argv[2], sys.argv[3]
-mesh = make_production_mesh(multi_pod=(meshname == "multi"))
-cell = input_specs(arch, shape)
-in_specs = []
-for i, a in enumerate(cell.args):
-    if i == 0:
-        in_specs.append(SH.param_specs(a, mesh))
-    elif cell.kind == "train" and i == 1:
-        pspec = SH.param_specs(cell.args[0], mesh)
-        in_specs.append(type(a)(m=pspec, v=pspec, count=jax.sharding.PartitionSpec()))
-    elif cell.kind == "decode" and i == 1:
-        in_specs.append(SH.cache_specs(cell.cfg, a, mesh, cell.shape.global_batch))
-    elif isinstance(a, dict):
-        in_specs.append(SH.batch_specs(a, mesh))
-    else:
-        in_specs.append(jax.sharding.PartitionSpec())
-with mesh, pctx.policy(mesh):
-    compiled = jax.jit(cell.step, in_shardings=SH.to_shardings(tuple(in_specs), mesh),
-                       donate_argnums=cell.donate).lower(*cell.args).compile()
-hlo = compiled.as_text()
-BY = {"f64":8,"f32":4,"f16":2,"bf16":2,"s64":8,"u64":8,"s32":4,"u32":4,"s16":2,"u16":2,"s8":1,"u8":1,"pred":1}
-pat = re.compile(r"^\s*%?\S+ = (f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]+)\][^ ]* (\S+)")
-sizes = collections.Counter()
-for line in hlo.splitlines():
-    m = pat.match(line)
-    if not m: continue
-    n = 1
-    for d in m.group(2).split(","): n *= int(d)
-    b = n * BY[m.group(1)]
-    if b > 100e6:
-        sizes[f"{m.group(3)[:30]} {m.group(1)}[{m.group(2)}]"] += b  # aggregate identical shapes
-for k, v in sizes.most_common(25):
-    print(f"{v/1e9:8.2f} GB  {k}")
-ma = compiled.memory_analysis()
-print("temp GB:", ma.temp_size_in_bytes/1e9)
+    PYTHONPATH=src python tools/hlo_top_buffers.py ARCH SHAPE MESH
+    (same as: python -m repro.analysis hlo buffers ...)
+"""
+import sys
+
+from repro.analysis.hlo import main_buffers
+
+if __name__ == "__main__":
+    arch, shape, mesh = sys.argv[1:4]
+    raise SystemExit(main_buffers(arch, shape, mesh))
