@@ -1,0 +1,366 @@
+"""Resilience benchmark: kill 1-of-4 sim shards mid-run and measure the
+failover plane end to end.
+
+A 4-shard sim fleet carries 4 tenants (weights 2:2:1:1), one deployment
+per tenant per shard.  A seeded :class:`FaultPlan` crashes shard 2 at a
+fixed global epoch.  Traffic is driven *through the coordinator* in
+fixed-size epoch chunks — clients keep injecting into the routed fleet,
+so after the crash their packets follow the failed-over routes (sources
+attached to a crashed shard's event loop freeze with it; a resilience
+bench must model clients, not ghosts).  Each tenant's clients load-
+balance across its live replicas: demand is spread evenly over the
+*distinct shards* its deployments currently route to, ECMP-style, so a
+moved replica that lands next to a sibling does not double that shard's
+offered load.  Offered load tracks 0.98x the *healthy* capacity —
+admission-controlled clients keeping utilization high but stable, so the
+steady state is exact (delivered == offered, shares == weights) and every
+deviation in the trace is attributable to the failure.
+
+Reported, per chunk (2 global epochs):
+
+  - **delivered ratio** — served / offered bytes.  1.0 in steady state;
+    it dips while the dead shard's queues are stranded and the clients'
+    capacity view is stale, then overshoots slightly as survivors drain
+    the backlog (the recovery signal, with share error);
+  - **share error** — worst deviation of weight-normalized served bytes
+    from their mean inside the chunk (the fairness guard);
+  - **victim p99** — p99 latency over packets completing in the failover
+    window (the crash chunk and the next), vs the steady-state chunk
+    before the crash;
+  - **packets lost** — the coordinator's write-off ledger: in-flight
+    packets stranded on the dead shard, plus client-visible inject
+    failures after bounded retry;
+  - **recovery epochs** — global epochs from the failover record until
+    the first chunk with delivered ratio back above 95% AND share error
+    back within 5%.
+
+Determinism: the whole scenario runs TWICE from scratch with the same
+plan seed; the canonical-JSON fingerprints of the two reports must be
+identical (DAG uids are process-global, so the fingerprint uses
+uid-free normalized records).
+
+Acceptance (the ISSUE-7 bar): zero lost deployments, share error back
+within 5% in a bounded number of epochs, and identical fingerprints.
+
+Writes ``BENCH_resilience.json`` at the repo root and returns a flat
+summary for ``benchmarks.run``.
+
+CLI:  PYTHONPATH=src python -m benchmarks.bench_resilience [--smoke|--full]
+                                                           [--out PATH]
+Exit codes: 0 ok, 1 schema/acceptance failure, 2 bad usage.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import sys
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_OUT = REPO_ROOT / "BENCH_resilience.json"
+
+WEIGHTS = {"t0": 2.0, "t1": 2.0, "t2": 1.0, "t3": 1.0}
+N_SHARDS = 4
+DEAD_SHARD = 2
+SHARD_GBPS = 100.0                  # one sim shard = one 100G sNIC
+EPOCHS_PER_CHUNK = 2
+PKT_BYTES = 1500
+LOAD_FACTOR = 0.98                  # offered / healthy capacity
+SHARE_ERR_BOUND = 0.05
+DELIVERED_BOUND = 0.95
+RECOVERY_EPOCH_BOUND = 8
+
+
+def _share_err(served: dict[str, float]) -> float:
+    shares = [served.get(t, 0.0) / WEIGHTS[t] for t in WEIGHTS]
+    mean = sum(shares) / len(shares)
+    if mean <= 0:
+        return 1.0
+    return max(abs(s / mean - 1.0) for s in shares)
+
+
+def _p99_us(lat_ns: list[float]) -> float:
+    if not lat_ns:
+        return 0.0
+    s = sorted(lat_ns)
+    return round(s[min(len(s) - 1, int(0.99 * len(s)))] / 1e3, 1)
+
+
+def _window_lats(sb, prev: dict[int, int]) -> dict[str, list[float]]:
+    """Latency samples that landed since the previous call, merged across
+    the fleet (FlowStats lists are append-only; rack peers may share one,
+    so the cursor is keyed by object identity)."""
+    out: dict[str, list[float]] = {}
+    for sh in sb.shards:
+        for snic in sh.snics:
+            for t, st in snic.stats.items():
+                k = id(st)
+                n0 = prev.get(k, 0)
+                if len(st.latencies_ns) > n0:
+                    out.setdefault(t, []).extend(st.latencies_ns[n0:])
+                prev[k] = len(st.latencies_ns)
+    return out
+
+
+# ============================================================= scenario ====
+def _run_once(n_chunks: int, crash_epoch: int, seed: int) -> dict:
+    """Build the fleet from scratch, run the kill-1-of-4 scenario, return
+    a normalized (uid-free, deterministic) report."""
+    from repro.api import Platform, ShardedBackend, SimBackend, VPC_SPECS, nt
+    from repro.faults import FaultError, FaultPlan
+
+    plan = FaultPlan(seed=seed).crash(shard=DEAD_SHARD, epoch=crash_epoch)
+    sb = ShardedBackend(
+        [SimBackend(name=f"sim{i}", seed=100 + i) for i in range(N_SHARDS)],
+        fault_plan=plan, health_threshold=2, auto_rebalance=False)
+    plat = Platform(sb, specs=VPC_SPECS)
+    chain = nt("firewall") >> nt("nat")
+    deps = {t: [plat.tenant(t, weight=w).deploy(chain, shard=s)
+                for s in range(N_SHARDS)]
+            for t, w in WEIGHTS.items()}
+    sb.settle()
+
+    chunk_ns = EPOCHS_PER_CHUNK * sb.global_epoch_ns
+    wsum = sum(WEIGHTS.values())
+    cursors: dict[int, int] = {}
+    prev_bytes = {t: 0.0 for t in WEIGHTS}
+    chunks, inject_errors = [], 0
+    for c in range(n_chunks):
+        # clients track the *healthy* fleet (as of the chunk boundary —
+        # stale for the chunk a crash lands in, which is the realistic
+        # dip): offered = LOAD_FACTOR x capacity, split by weight,
+        # load-balanced over each tenant's live replicas (one uid per
+        # distinct routed shard — ECMP across replicas)
+        healthy = sum(sb.healthy)
+        cap_bytes = healthy * SHARD_GBPS / 8.0 * chunk_ns
+        offered = 0
+        for t, w in WEIGHTS.items():
+            by_shard: dict[int, int] = {}
+            for d in deps[t]:
+                by_shard.setdefault(sb.routes[d.uid], d.uid)
+            uids = [by_shard[s] for s in sorted(by_shard)]
+            pkts = int(LOAD_FACTOR * cap_bytes * (w / wsum) / PKT_BYTES)
+            offered += pkts * PKT_BYTES
+            for k in range(pkts):
+                try:
+                    sb.inject(t, uids[k % len(uids)], PKT_BYTES)
+                except FaultError:
+                    inject_errors += 1      # client-visible after retries
+        plat.run(duration_ms=chunk_ns / 1e6)
+        rep = plat.report()
+        served = {t: rep[t].bytes_done - prev_bytes[t] for t in WEIGHTS}
+        prev_bytes = {t: rep[t].bytes_done for t in WEIGHTS}
+        lats = _window_lats(sb, cursors)
+        chunks.append({
+            "chunk": c,
+            "end_epoch": (c + 1) * EPOCHS_PER_CHUNK,
+            "healthy": healthy,
+            "share_err": round(_share_err(served), 4),
+            "delivered": round(sum(served.values()) / offered, 4),
+            "served_mb": {t: round(served[t] / 1e6, 3) for t in WEIGHTS},
+            "p99_us": _p99_us([x for v in lats.values() for x in v]),
+            "failovers": len(rep.extra["failovers"]),
+        })
+
+    rep = plat.report()
+    failovers = [{"epoch": f["epoch"], "shard": f["shard"],
+                  "reason": f["reason"], "moved": len(f["moved"]),
+                  "lost": f["lost"], "inflight_pkts": f["inflight_pkts"],
+                  "replayed": f["replayed"]}
+                 for f in rep.extra["failovers"]]
+    fo_chunk = next((c["chunk"] for c in chunks if c["failovers"]), None)
+    fo_epoch = failovers[0]["epoch"] if failovers else None
+    recovered = next(
+        (c for c in chunks
+         if fo_chunk is not None and c["chunk"] >= fo_chunk
+         and c["share_err"] <= SHARE_ERR_BOUND
+         and c["delivered"] >= DELIVERED_BOUND), None)
+    victim_win = [c for c in chunks
+                  if fo_chunk is not None
+                  and fo_chunk <= c["chunk"] <= fo_chunk + 1]
+    steady = [c for c in chunks
+              if fo_chunk is not None and c["chunk"] == fo_chunk - 1]
+    return {
+        "chunks": chunks,
+        "failovers": failovers,
+        "recoveries": len(rep.extra["recoveries"]),
+        "lost": dict(rep.extra["lost"]),
+        "inject_retries": rep.extra["inject_retries"],
+        "inject_errors": inject_errors,
+        "fault_plan": rep.extra["faults"]["plan"],
+        "failover_epoch": fo_epoch,
+        "recovery_epochs": (recovered["end_epoch"] - fo_epoch
+                            if recovered and fo_epoch is not None else None),
+        "victim_p99_us": max((c["p99_us"] for c in victim_win), default=0.0),
+        "steady_p99_us": max((c["p99_us"] for c in steady), default=0.0),
+        "per_tenant": {t: {"pkts": rep[t].pkts_done,
+                           "mb": round(rep[t].bytes_done / 1e6, 3),
+                           "drops": rep[t].drops,
+                           "p99_us": round(rep[t].p99_latency_us, 1)}
+                       for t in WEIGHTS},
+    }
+
+
+def _fingerprint(run: dict) -> str:
+    return hashlib.sha256(
+        json.dumps(run, sort_keys=True).encode()).hexdigest()[:16]
+
+
+# ================================================================= bench ====
+def bench_resilience(smoke: bool | None = None,
+                     out_path: Path | str = DEFAULT_OUT) -> dict:
+    import jax
+    backend = jax.default_backend()
+    if smoke is None:
+        smoke = backend != "tpu"
+    n_chunks = 10 if smoke else 24
+    crash_epoch = 7 if smoke else 13
+    seed = 42
+
+    run1 = _run_once(n_chunks, crash_epoch, seed)
+    run2 = _run_once(n_chunks, crash_epoch, seed)   # determinism replay
+    fp1, fp2 = _fingerprint(run1), _fingerprint(run2)
+
+    rec = run1["recovery_epochs"]
+    last = run1["chunks"][-1]
+    acceptance = {
+        "lost_deployments": run1["lost"]["deployments"],
+        "recovery_epochs": rec,
+        "recovery_epoch_bound": RECOVERY_EPOCH_BOUND,
+        "final_share_err": last["share_err"],
+        "share_err_bound": SHARE_ERR_BOUND,
+        "final_delivered": last["delivered"],
+        "delivered_bound": DELIVERED_BOUND,
+        "deterministic": fp1 == fp2,
+        "pass": (run1["lost"]["deployments"] == 0
+                 and rec is not None and rec <= RECOVERY_EPOCH_BOUND
+                 and last["share_err"] <= SHARE_ERR_BOUND
+                 and last["delivered"] >= DELIVERED_BOUND
+                 and fp1 == fp2),
+    }
+    res = {
+        "bench": "bench_resilience",
+        "mode": "smoke" if smoke else "full",
+        "backend": backend,
+        "weights": WEIGHTS,
+        "scenario": {"n_shards": N_SHARDS, "dead_shard": DEAD_SHARD,
+                     "crash_epoch": crash_epoch, "n_chunks": n_chunks,
+                     "epochs_per_chunk": EPOCHS_PER_CHUNK,
+                     "load_factor": LOAD_FACTOR, "seed": seed},
+        "run": run1,
+        "fingerprints": {"run1": fp1, "run2": fp2},
+        "acceptance": acceptance,
+        "note": ("kill-1-of-4 sim fleet, 4 tenants 2:2:1:1, clients "
+                 "injecting through the coordinator at 0.98x healthy "
+                 "capacity, ECMP-spread over each tenant's live "
+                 "replicas.  delivered ratio and share_err are measured "
+                 "per 2-epoch chunk; victim p99 covers the failover "
+                 "chunk and the next; the same plan seed must reproduce "
+                 "the identical normalized report (uid-free canonical "
+                 "JSON)."),
+    }
+    Path(out_path).write_text(json.dumps(res, indent=1))
+    return res
+
+
+def check_schema(res: dict) -> list[str]:
+    """The contract CI enforces: the failover actually happened, the
+    ledger is complete, and the acceptance block passes."""
+    errs = []
+    for k in ("bench", "mode", "backend", "run", "fingerprints",
+              "acceptance"):
+        if k not in res:
+            errs.append(f"missing key {k!r}")
+    run = res.get("run", {})
+    if not run.get("failovers"):
+        errs.append("no failover was recorded — the crash never landed")
+    elif run["failovers"][0]["shard"] != f"sim{DEAD_SHARD}":
+        errs.append(f"failover hit {run['failovers'][0]['shard']}, "
+                    f"expected sim{DEAD_SHARD}")
+    for k in ("lost", "recovery_epochs", "victim_p99_us", "chunks"):
+        if k not in run:
+            errs.append(f"run missing {k!r}")
+    acc = res.get("acceptance", {})
+    if not acc.get("pass"):
+        errs.append(
+            f"acceptance failed: lost_deployments="
+            f"{acc.get('lost_deployments')}, recovery_epochs="
+            f"{acc.get('recovery_epochs')} (bound "
+            f"{acc.get('recovery_epoch_bound')}), final_share_err="
+            f"{acc.get('final_share_err')} (bound "
+            f"{acc.get('share_err_bound')}), final_delivered="
+            f"{acc.get('final_delivered')} (bound "
+            f"{acc.get('delivered_bound')}), deterministic="
+            f"{acc.get('deterministic')}")
+    return errs
+
+
+def bench_resilience_summary() -> dict:
+    """Entry for benchmarks.run: flat keys only."""
+    res = bench_resilience()
+    errs = check_schema(res)
+    if errs:
+        raise RuntimeError("; ".join(errs))
+    run = res["run"]
+    return {
+        "bench": res["bench"], "mode": res["mode"],
+        "backend": res["backend"],
+        "failover_epoch": run["failover_epoch"],
+        "recovery_epochs": run["recovery_epochs"],
+        "lost_deployments": run["lost"]["deployments"],
+        "lost_pkts": run["lost"]["pkts"],
+        "lost_injects": run["lost"]["injects"],
+        "inject_retries": run["inject_retries"],
+        "victim_p99_us": run["victim_p99_us"],
+        "steady_p99_us": run["steady_p99_us"],
+        "final_share_err": run["chunks"][-1]["share_err"],
+        "final_delivered": run["chunks"][-1]["delivered"],
+        "deterministic": res["acceptance"]["deterministic"],
+        "acceptance_pass": res["acceptance"]["pass"],
+    }
+
+
+def main(argv=None) -> int:
+    args = list(argv if argv is not None else sys.argv[1:])
+    smoke: bool | None = None
+    out = DEFAULT_OUT
+    while args:
+        a = args.pop(0)
+        if a == "--smoke":
+            smoke = True
+        elif a == "--full":
+            smoke = False
+        elif a == "--out":
+            if not args:
+                print("--out needs a path")
+                return 2
+            out = Path(args.pop(0))
+        else:
+            print(f"unknown flag {a!r}; known: --smoke --full --out PATH")
+            return 2
+    t0 = time.time()
+    res = bench_resilience(smoke=smoke, out_path=out)
+    run = res["run"]
+    print(f"bench_resilience,failover_epoch,{run['failover_epoch']}")
+    print(f"bench_resilience,recovery_epochs,{run['recovery_epochs']}")
+    print(f"bench_resilience,lost_deployments,{run['lost']['deployments']}")
+    print(f"bench_resilience,lost_pkts,{run['lost']['pkts']}")
+    print(f"bench_resilience,victim_p99_us,{run['victim_p99_us']}")
+    print(f"bench_resilience,steady_p99_us,{run['steady_p99_us']}")
+    print(f"bench_resilience,final_share_err,"
+          f"{run['chunks'][-1]['share_err']}")
+    print(f"bench_resilience,final_delivered,"
+          f"{run['chunks'][-1]['delivered']}")
+    print(f"bench_resilience,deterministic,"
+          f"{res['acceptance']['deterministic']}")
+    print(f"bench_resilience,acceptance_pass,{res['acceptance']['pass']}")
+    print(f"bench_resilience,seconds,{time.time() - t0:.1f}")
+    errs = check_schema(res)
+    for e in errs:
+        print(f"bench_resilience,SCHEMA_ERROR,{e}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -17,6 +17,7 @@ from pathlib import Path
 from benchmarks import figures
 from benchmarks.bench_compute import bench_compute_summary
 from benchmarks.bench_fairness import bench_fairness_summary
+from benchmarks.bench_resilience import bench_resilience_summary
 from benchmarks.bench_sharding import bench_sharding_summary
 
 OUT = Path(__file__).resolve().parents[1] / "experiments" / "bench"
@@ -24,6 +25,7 @@ OUT = Path(__file__).resolve().parents[1] / "experiments" / "bench"
 BENCHES = {
     "bench_compute": bench_compute_summary,
     "bench_fairness": bench_fairness_summary,
+    "bench_resilience": bench_resilience_summary,
     "bench_sharding": bench_sharding_summary,
     "fig2_consolidation_disagg": figures.fig2_consolidation_disagg,
     "fig3_consolidation_dc": figures.fig3_consolidation_dc,

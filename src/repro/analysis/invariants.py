@@ -28,7 +28,12 @@ wrapped in :class:`InvariantViolation`):
   - **I-STORE**: the sNIC packet store never holds negative bytes, and
     every live NT instance's credit count stays within [0, cfg.credits].
   - **I-BATCH**: on the compute backend, batches injected == batches
-    completed + batches queued.
+    completed + batches queued + batches shed (backpressure/tenant-churn
+    sheds are counted, never silent).
+  - **I-FAILOVER**: on a fleet coordinator with failover armed, every
+    routed deployment points at a healthy shard (unless it was counted
+    lost because no healthy shard remained), and the loss/replay
+    accounting never goes negative.
   - **I-VMEM**: page frames are conserved (free + owned == total), every
     owned frame's page-table entry points back at it, and the swapped-page
     counter matches the page tables.
@@ -158,13 +163,14 @@ def compute_diags(backend, where: str) -> list[Diagnostic]:
     injected = backend.stats["batches"]
     completed = backend.completed_batches
     queued = backend.sched.pending()
-    if injected != completed + queued:
+    shed = getattr(backend, "shed_batches", 0)
+    if injected != completed + queued + shed:
         out.append(_d(
             "I-BATCH", where,
             f"batch leak: injected {injected} != completed {completed} + "
-            f"queued {queued}",
+            f"queued {queued} + shed {shed}",
             "every drained item must be dispatched and counted exactly "
-            "once per run()"))
+            "once per run(); every shed item must bump shed_batches"))
     return out
 
 
@@ -199,6 +205,38 @@ def vmem_diags(vm, where: str) -> list[Diagnostic]:
     return out
 
 
+def failover_diags(fleet, where: str) -> list[Diagnostic]:
+    """I-FAILOVER over a coordinator with health tracking (no-op for a
+    fleet without it)."""
+    out: list[Diagnostic] = []
+    healthy = getattr(fleet, "healthy", None)
+    if healthy is None:
+        return out
+    lost_uids = getattr(fleet, "lost_uids", set())
+    for uid, s in fleet.routes.items():
+        if not healthy[s] and uid not in lost_uids:
+            out.append(_d(
+                "I-FAILOVER", f"{where}/dag{uid}",
+                f"deployment {uid} still routed to unhealthy shard "
+                f"{fleet.shard_names[s]!r}",
+                "failover must reroute every resident deployment or count "
+                "it lost"))
+    counters = dict(getattr(fleet, "lost", {}) or {})
+    counters["replayed"] = getattr(fleet, "replayed", 0)
+    counters["retries"] = getattr(fleet, "retries", 0)
+    for k, v in counters.items():
+        if v < 0:
+            out.append(_d(
+                "I-FAILOVER", where,
+                f"failover counter {k!r} went negative ({v})",
+                "loss/replay accounting only ever increments"))
+    return out
+
+
+def check_failover(fleet, where: str) -> None:
+    _raise_if(failover_diags(fleet, where))
+
+
 def check_engine(engine, where: str) -> None:
     diags = scheduler_diags(engine.sched, where)
     diags.extend(vmem_diags(engine.vmem, f"{where}/vmem"))
@@ -208,7 +246,7 @@ def check_engine(engine, where: str) -> None:
 __all__ = [
     "InvariantViolation", "enabled",
     "check_scheduler", "check_snic", "check_fleet", "check_compute",
-    "check_engine",
+    "check_engine", "check_failover",
     "scheduler_diags", "snic_diags", "fleet_packet_diags", "compute_diags",
-    "vmem_diags",
+    "vmem_diags", "failover_diags",
 ]

@@ -125,6 +125,16 @@ class ComputeNT:
     reads: tuple[str, ...] = ()
     schema: tuple[tuple[str, tuple[int, ...], str], ...] = ()
     tile_bytes: int = 0
+    #: optional stream-state synthesizer, ``stream(n, params, state) ->
+    #: (fields, new_state)``.  Activated per deployment with
+    #: ``params[name]["stream"] = True``: instead of ``prep`` at inject
+    #: time, the per-packet fields are assigned at *dispatch* time from a
+    #: running per-deployment state (e.g. a continuing ChaCha ``ctr``
+    #: across batches).  Because the state only ever advances when work is
+    #: actually dispatched, a checkpoint taken between runs reflects
+    #: exactly the completed stream — a failed-over deployment restored
+    #: from it resumes bit-exact.
+    stream: Callable[[int, dict, dict], tuple[dict, dict]] | None = None
 
 
 # ------------------------------------------------------- built-in NT library --
@@ -151,6 +161,15 @@ def _chacha_prep(n, params):
     return {"ctr": jnp.uint32(c0) + jnp.arange(n, dtype=jnp.uint32)}
 
 
+def _chacha_stream(n, params, state):
+    """Stream-mode ``ctr``: a running keystream counter that continues
+    across batches (and, via export/import_state + CheckpointManager,
+    across a crash/recover cycle)."""
+    nxt = int(state.get("next_ctr", params.get("counter0", 1)))
+    return ({"ctr": jnp.uint32(nxt) + jnp.arange(n, dtype=jnp.uint32)},
+            {"next_ctr": nxt + n})
+
+
 BUILTIN_COMPUTE_NTS: dict[str, ComputeNT] = {
     "firewall": ComputeNT(
         "firewall", _fw_nt, writes=("allow",), reads=("headers",),
@@ -165,7 +184,7 @@ BUILTIN_COMPUTE_NTS: dict[str, ComputeNT] = {
         "chacha20", _chacha_nt, writes=("payload",),
         reads=("payload", "ctr"),
         schema=(("payload", (16,), "uint32"), ("ctr", (), "uint32")),
-        prep=_chacha_prep, prep_fields=("ctr",),
+        prep=_chacha_prep, prep_fields=("ctr",), stream=_chacha_stream,
         tile_bytes=_chacha_tile(block_n=256)),
 }
 
@@ -231,6 +250,9 @@ class _Deployment:
     # (bucket_rows, path) -> jitted program; one jit instance per bucket so
     # the compile cache is explicit and countable
     cache: dict[tuple[int, str], Callable] = field(default_factory=dict)
+    #: per-NT running stream state (plain scalars, checkpointable); only
+    #: advanced at dispatch time, so it always reflects completed work
+    nt_state: dict[str, dict] = field(default_factory=dict)
 
 
 def _rows(batch: dict) -> int:
@@ -266,6 +288,24 @@ def _fill_bucket(arrays, b: int):
         buf = buf.at[off:off + a.shape[0]].set(a)
         off += a.shape[0]
     return buf
+
+
+def _corrupt_batch(batch: dict, rng) -> dict:
+    """Injected data fault: flip one payload bit (deterministic under the
+    FaultState's seeded rng)."""
+    pl = batch.get("payload")
+    if pl is None or not hasattr(pl, "dtype") or getattr(pl, "size", 0) == 0:
+        return batch
+    a = jnp.asarray(pl)
+    if not jnp.issubdtype(a.dtype, jnp.integer):
+        return batch
+    flat = a.reshape(-1)
+    i = rng.randrange(flat.size)
+    bit = jnp.asarray(1 << rng.randrange(8 * a.dtype.itemsize), a.dtype)
+    flat = flat.at[i].set(flat[i] ^ bit)
+    out = dict(batch)
+    out["payload"] = flat.reshape(a.shape)
+    return out
 
 
 def _pad_to(x, b: int):
@@ -329,18 +369,28 @@ class ComputeBackend:
         self.stats = {"traces": 0, "dispatches": 0, "fused_dispatches": 0,
                       "batches": 0, "coalesced_batches": 0, "runs": 0}
         #: batches fully dispatched + synced (I-BATCH conservation: this +
-        #: sched.pending() == stats["batches"]); kept out of ``stats`` so
-        #: report().extra is unchanged
+        #: sched.pending() + shed_batches == stats["batches"]); kept out of
+        #: ``stats`` so report().extra is unchanged
         self.completed_batches = 0
+        #: batches shed by backpressure or tenant churn (I-BATCH term)
+        self.shed_batches = 0
+        #: fault-injection switchboard (armed by a FaultInjector; None =
+        #: zero-cost hooks)
+        self.faults = None
 
     @property
     def tenants(self) -> dict[str, float]:
         return self.sched.weights
 
     def capacity(self) -> dict:
-        """Capacity probe for a placer: nominal wire Gbps + device identity."""
+        """Capacity probe for a placer: nominal wire Gbps + device identity.
+        Doubles as the health heartbeat — raises when crashed/hung, and a
+        degraded shard reports its reduced rate."""
+        if self.faults is not None:
+            self.faults.check_probe()
+        scale = self.faults.degrade if self.faults is not None else 1.0
         dev = self.device if self.device is not None else jax.devices()[0]
-        return {"gbps": self.capacity_gbps, "device": str(dev)}
+        return {"gbps": scale * self.capacity_gbps, "device": str(dev)}
 
     # ----------------------------------------------------------- protocol --
     def register(self, spec: NTSpec) -> None:
@@ -354,6 +404,20 @@ class ComputeBackend:
 
     def add_tenant(self, tenant: str, weight: float) -> None:
         self.sched.add_tenant(tenant, weight)
+
+    def remove_tenant(self, tenant: str) -> tuple[int, float]:
+        """Tenant churn: drop the tenant's queue; shed batches are counted
+        into the I-BATCH conservation term."""
+        n, cost = self.sched.remove_tenant(tenant)
+        self.shed_batches += n
+        return n, cost
+
+    def shed_backlog(self, tenant: str, cost_limit: float) -> tuple[int, float]:
+        """Backpressure: cap one tenant's queued wire bytes (graceful
+        degradation under fleet overload); counted, never silent."""
+        n, cost = self.sched.shed_backlog(tenant, cost_limit)
+        self.shed_batches += n
+        return n, cost
 
     # ------------------------------------------------------------ compile --
     def _validate(self, dag: NTDag) -> None:
@@ -460,6 +524,12 @@ class ComputeBackend:
                 f"{tenant!r}")
         batch = dict(state or {})
         batch.update(fields)
+        if self.faults is not None:
+            verdict = self.faults.gate_inject(tenant, dep.dag.all_nts())
+            if verdict == "drop":
+                return          # wire loss before the runtime; counted
+            if verdict == "corrupt":
+                batch = _corrupt_batch(batch, self.faults.rng)
         n = _rows(batch)
         for stage in dep.dag.stages:      # synthesize per-packet state (ctr)
             for branch in stage:
@@ -467,6 +537,9 @@ class ComputeBackend:
                     nt = self.nts.get(name)
                     if nt is None or nt.prep is None:
                         continue
+                    if nt.stream is not None and \
+                            dep.params.get(name, {}).get("stream"):
+                        continue          # stream mode: assigned at dispatch
                     if nt.prep_fields and all(f in batch
                                               for f in nt.prep_fields):
                         continue          # caller supplied them all
@@ -479,6 +552,53 @@ class ComputeBackend:
         self.sched.submit(tenant, (self._order, dag_uid, batch),
                           cost=float(wire) if wire else float(max(n, 1)))
         self.stats["batches"] += 1
+
+    def _stream_fields(self, dep: _Deployment, batch: dict) -> dict:
+        """Dispatch-time synthesis for stream-mode NTs: advance the
+        per-deployment running state and return the per-packet fields for
+        this batch.  WDRR preserves per-tenant FIFO and a deployment
+        belongs to one tenant, so dispatch order == inject order per
+        stream."""
+        out: dict = {}
+        n = _rows(batch)
+        for stage in dep.dag.stages:
+            for branch in stage:
+                for name in branch:
+                    nt = self.nts.get(name)
+                    if nt is None or nt.stream is None:
+                        continue
+                    p = dep.params.get(name, {})
+                    if not p.get("stream"):
+                        continue
+                    if nt.prep_fields and all(f in batch
+                                              for f in nt.prep_fields):
+                        continue          # caller supplied them all
+                    fields, dep.nt_state[name] = nt.stream(
+                        n, p, dep.nt_state.get(name, {}))
+                    out.update(fields)
+        return out
+
+    # ------------------------------------------------- failover state I/O --
+    def export_state(self, dag_uid: int) -> dict | None:
+        """Snapshot one deployment's stream state (plain scalars) for the
+        coordinator's checkpoint; None when the deployment is stateless."""
+        dep = self.deployments.get(dag_uid)
+        if dep is None or not dep.nt_state:
+            return None
+        return {nt: dict(st) for nt, st in dep.nt_state.items()}
+
+    def import_state(self, dag_uid: int, state: dict) -> None:
+        """Restore stream state on a failover target so the recovered
+        deployment resumes bit-exact.  Values may arrive as 0-d numpy
+        arrays from a checkpoint restore; coerce back to plain ints."""
+        def _scalar(v):
+            try:
+                return int(v)
+            except (TypeError, ValueError):
+                return v
+        dep = self.deployments[dag_uid]
+        dep.nt_state = {nt: {k: _scalar(v) for k, v in st.items()}
+                        for nt, st in state.items()}
 
     def reset_window(self, keep_results: bool = False) -> None:
         """Start a fresh measurement window (the compute analogue of
@@ -501,12 +621,17 @@ class ComputeBackend:
         """Drain the tenant queues in WDRR order, dispatch every batch
         asynchronously (coalescing *consecutive* same-DAG same-signature
         entries of the fair order), then synchronize with the device ONCE."""
+        if self.faults is not None and not self.faults.serving():
+            return          # crashed/hung: queues keep their pending work
         t0 = time.perf_counter()
         # fair service order: the whole pending set, interleaved by weight
         groups: list[tuple[tuple, list]] = []
         enq_at: dict[int, tuple[str, float]] = {}
         for tenant, item in self.sched.drain():
             order, dag_uid, batch = item.payload
+            sf = self._stream_fields(self.deployments[dag_uid], batch)
+            if sf:
+                batch = {**batch, **sf}
             self.dispatch_log.append((tenant, item.cost))
             enq_at[order] = (tenant, item.enqueued_at)
             key = (dag_uid, _signature(batch))

@@ -66,10 +66,32 @@ class Placer:
         self.routes: dict[int, int] = {}       # dag_uid -> current shard
         self.owners: dict[int, str] = {}       # dag_uid -> tenant
         self.decisions: list[PlacementDecision] = []
+        #: shards excluded from placement/rebalance (failed-over); their
+        #: residents can still be counted and moved *off* them
+        self.disabled: set[int] = set()
 
     @property
     def n_shards(self) -> int:
         return len(self.capacities)
+
+    # ----------------------------------------------------------- liveness --
+    def candidates(self) -> list[int]:
+        return [s for s in range(self.n_shards) if s not in self.disabled]
+
+    def disable(self, shard: int) -> None:
+        self.disabled.add(shard)
+
+    def enable(self, shard: int) -> None:
+        self.disabled.discard(shard)
+
+    def set_capacity(self, shard: int, capacity: float) -> None:
+        """Live capacity refresh (degradation feeds the placer too)."""
+        self.capacities[shard] = float(capacity)
+
+    def add_shard(self, capacity: float) -> int:
+        """Grow the fleet by one (spare) shard; returns its index."""
+        self.capacities.append(float(capacity))
+        return self.n_shards - 1
 
     # ---------------------------------------------------------- monitors --
     def record(self, tenant: str, load: float) -> None:
@@ -153,11 +175,17 @@ class Placer:
 
     # --------------------------------------------------------- placement --
     def place(self, tenant: str, dag_uid: int) -> PlacementDecision:
-        """Pick a shard for a new deployment and record the assignment."""
+        """Pick a shard for a new deployment and record the assignment.
+
+        Disabled (failed-over) shards are never candidates; with every
+        shard disabled there is nowhere to place, which the caller counts
+        as a lost deployment."""
+        cands = self.candidates()
+        if not cands:
+            raise ValueError("no enabled shard to place on")
         prof = self.profile(tenant)
         if prof is None or len(prof) < self.min_history:
-            shard = min(range(self.n_shards),
-                        key=lambda s: (self.shard_load(s), s))
+            shard = min(cands, key=lambda s: (self.shard_load(s), s))
             dec = PlacementDecision("place", dag_uid, tenant, shard,
                                     "cold start: least-loaded shard")
         else:
@@ -168,13 +196,13 @@ class Placer:
             total = len(self.deployments_of(tenant))
             scores: dict[int, float] = {}
             feas: dict[int, bool] = {}
-            for s in range(self.n_shards):
+            for s in cands:
                 here = len(self.deployments_of(tenant, s))
                 frac = (here + 1) / (total + 1)
                 projected = self.shard_peak(s, scale={tenant: frac})
                 scores[s] = projected - self.shard_peak(s)
                 feas[s] = projected <= self.capacities[s]
-            shard = min(range(self.n_shards),
+            shard = min(cands,
                         key=lambda s: (not feas[s], scores[s],
                                        self.shard_load(s), s))
             dec = PlacementDecision(
@@ -193,7 +221,7 @@ class Placer:
     # -------------------------------------------------------- rebalancing --
     def overloaded(self) -> list[int]:
         """Shards whose measured peak-of-aggregate exceeds capacity."""
-        return [s for s in range(self.n_shards)
+        return [s for s in self.candidates()
                 if self.shard_peak(s) > self.capacities[s]]
 
     def propose_moves(self) -> list[tuple[int, int, int]]:
@@ -206,7 +234,7 @@ class Placer:
         move is not refused just because the tenant's whole load would not
         fit at the destination."""
         moves: list[tuple[int, int, int]] = []
-        if self.n_shards < 2:
+        if len(self.candidates()) < 2:
             return moves                      # nowhere to move anything
         for s in self.overloaded():
             fracs = self._fractions(s)
@@ -227,7 +255,9 @@ class Placer:
                 continue                      # nothing movable would help
             tenant, _red, step = max(cands, key=lambda x: x[1])
             total = len(self.deployments_of(tenant))
-            others = [d for d in range(self.n_shards) if d != s]
+            others = [d for d in self.candidates() if d != s]
+            if not others:
+                continue
             projected = {
                 d: self.shard_peak(d, scale={
                     tenant: len(self.deployments_of(tenant, d)) / total

@@ -29,15 +29,37 @@ SERVE_SPECS: dict[str, NTSpec] = {
 class ServeBackend:
     name = "serve"
 
-    def __init__(self, model_cfg, engine_cfg=None, params=None, seed: int = 0):
+    def __init__(self, model_cfg, engine_cfg=None, params=None, seed: int = 0,
+                 name: str | None = None, capacity_gbps: float = 10.0):
         # deferred import: keep `import repro.api` light for sim-only users
         from repro.serving.engine import Engine, EngineConfig
+        if name is not None:
+            self.name = name
         self.ecfg = engine_cfg or EngineConfig()
         self.engine = Engine(model_cfg, self.ecfg, params=params, seed=seed)
         self.dags: dict[int, NTDag] = {}
         self._prelaunched = False
+        #: nominal wire capacity a placer/coordinator provisions against
+        self.capacity_gbps = capacity_gbps
+        #: fault-injection switchboard (armed by a FaultInjector; None =
+        #: zero-cost hooks)
+        self.faults = None
 
     # ----------------------------------------------------------- protocol --
+    def capacity(self) -> dict:
+        """Capacity probe / health heartbeat for a fleet coordinator:
+        nominal Gbps plus live admission headroom.  Raises when crashed or
+        hung; a degraded engine reports a reduced rate."""
+        if self.faults is not None:
+            self.faults.check_probe()
+        scale = self.faults.degrade if self.faults is not None else 1.0
+        cap = {"gbps": scale * self.capacity_gbps,
+               "pending": self.engine.sched.pending()}
+        if self.ecfg.max_pending is not None:
+            cap["free_slots"] = max(
+                0, self.ecfg.max_pending - self.engine.sched.pending())
+        return cap
+
     def register(self, spec: NTSpec) -> None:
         if spec.name not in SERVE_SPECS:
             raise DagError(
@@ -46,6 +68,9 @@ class ServeBackend:
 
     def add_tenant(self, tenant: str, weight: float) -> None:
         self.engine.add_tenant(tenant, weight)
+
+    def remove_tenant(self, tenant: str) -> tuple[int, float]:
+        return self.engine.remove_tenant(tenant)
 
     def deploy(self, dag: NTDag, **_kw) -> None:
         names = dag.all_nts()

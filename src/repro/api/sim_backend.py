@@ -60,6 +60,9 @@ class SimBackend:
         self.snic = self.snics[0]
         self._t0: float | None = None
         self._elapsed_ns = 0.0
+        #: fault-injection switchboard (armed by a FaultInjector; None =
+        #: zero-cost hooks)
+        self.faults = None
 
     # ----------------------------------------------------------- protocol --
     @property
@@ -81,12 +84,17 @@ class SimBackend:
 
     def capacity(self) -> dict:
         """Capacity probe for a placer: nominal Gbps plus live device
-        headroom (regions/memory/store) from the sNIC probes."""
+        headroom (regions/memory/store) from the sNIC probes.  Doubles as
+        the health heartbeat — a crashed or hung shard raises here (a
+        probe miss), and a degraded shard reports its reduced rate."""
+        if self.faults is not None:
+            self.faults.check_probe()
         probes = [s.capacity_probe() for s in self.snics]
+        scale = self.faults.degrade if self.faults is not None else 1.0
         return {
-            "gbps": sum(p["uplink_gbps"] for p in probes),
-            "bytes_per_epoch": sum(p["ingress_bytes_per_epoch"]
-                                   for p in probes),
+            "gbps": scale * sum(p["uplink_gbps"] for p in probes),
+            "bytes_per_epoch": scale * sum(p["ingress_bytes_per_epoch"]
+                                           for p in probes),
             "free_regions": sum(p["free_regions"] for p in probes),
             "free_mem_frames": sum(p["free_mem_frames"] for p in probes),
         }
@@ -129,6 +137,31 @@ class SimBackend:
             s.sched.add_tenant(tenant, weight)
             s.stats.setdefault(tenant, FlowStats())
 
+    def remove_tenant(self, tenant: str) -> tuple[int, float]:
+        """Tenant churn: unregister from every sNIC scheduler (queued work
+        is shed and counted as drops).  Completed-work stats are kept so
+        the final report still covers the departed tenant's service."""
+        items, cost = 0, 0.0
+        for s in self.snics:
+            s.cfg.tenant_weights.pop(tenant, None)
+            n, c = s.sched.remove_tenant(tenant)
+            items += n
+            cost += c
+        return items, cost
+
+    def shed_backlog(self, tenant: str, cost_limit: float) -> tuple[int, float]:
+        """Backpressure: cap the tenant's queued ingress bytes on every
+        sNIC scheduler.  Shed packets are charged to the tenant's FlowStats
+        drops so the report (and the I-PKTS sum) accounts for them."""
+        items, cost = 0, 0.0
+        for s in self.snics:
+            n, c = s.sched.shed_backlog(tenant, cost_limit)
+            if n and tenant in s.stats:
+                s.stats[tenant].drops += n
+            items += n
+            cost += c
+        return items, cost
+
     def deploy(self, dag: NTDag, prelaunch: bool = True, snic: int = 0,
                programs=None, **_kw) -> None:
         """``programs`` overrides bitstream enumeration (§4.3) — e.g. to
@@ -138,6 +171,12 @@ class SimBackend:
 
     def inject(self, tenant: str, dag_uid: int, size_bytes: int,
                snic: int = 0) -> None:
+        if self.faults is not None:
+            dag = self.snics[snic].dags.get(dag_uid)
+            verdict = self.faults.gate_inject(
+                tenant, dag.all_nts() if dag is not None else ())
+            if verdict == "drop":
+                return          # pre-NIC wire loss: counted on the FaultState
         self.snics[snic].inject(tenant, dag_uid, size_bytes)
 
     def add_source(self, kind: str, tenant: str, dag_uid: int,
@@ -181,6 +220,8 @@ class SimBackend:
         (``settle`` resets the window so PR wait time is not counted)."""
         if settle:
             self.settle()
+        if self.faults is not None and not self.faults.serving():
+            return          # crashed/hung: the virtual clock freezes
         if duration_ns is None:
             duration_ns = (duration_ms if duration_ms is not None else 1.0) \
                 * MS
@@ -217,4 +258,8 @@ class SimBackend:
             rep.tenants[tenant].extra["weight"] = \
                 self.snic.sched.weights.get(tenant, 1.0)
         rep.extra["pr_count"] = sum(s.regions.pr_count for s in self.snics)
+        if self.rack is not None:
+            rep.extra["migrate_back_giveups"] = self.rack.migrate_back_giveups
+        if self.faults is not None:
+            rep.extra["faults"] = self.faults.summary()
         return rep

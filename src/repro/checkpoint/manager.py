@@ -1,8 +1,13 @@
 """Checkpointing: atomic, async, mesh-shape-agnostic restore.
 
 Fault-tolerance contract (1000+-node design):
-  - atomic: writes go to ``step_N.tmp`` then ``os.replace`` to ``step_N`` —
-    a crash mid-save never corrupts the latest checkpoint;
+  - atomic & durable: writes go to ``step_N.tmp`` (every leaf and the
+    meta fsynced, then the directory), an existing ``step_N`` is renamed
+    aside to ``step_N.old`` rather than deleted, and only then does
+    ``os.replace`` publish the new data — at no instant does the step
+    exist solely as a half-written directory.  ``__init__`` sweeps the
+    leftovers of a crash (orphan ``.tmp`` dirs are discarded; an orphan
+    ``.old`` whose final is missing or torn is promoted back);
   - async: the device->host transfer is synchronous (cheap, sharded) but
     file I/O happens on a background executor so the train loop continues;
   - elastic restore: arrays are saved logically (full, unsharded values, one
@@ -33,6 +38,33 @@ def _flatten(tree: Any):
     return leaves, treedef
 
 
+def _fsync_path(path: Path) -> None:
+    """fsync one file or directory; directory fsync is what makes a rename
+    durable (POSIX), and is a no-op on filesystems that reject it."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _complete(d: Path) -> bool:
+    """A checkpoint directory is complete iff its meta parses and every
+    leaf file it names exists — the torn-file detector for crash-mid-save
+    remnants (and for out-of-band truncation)."""
+    meta = d / "meta.json"
+    try:
+        n = int(json.loads(meta.read_text())["n_leaves"])
+    except (OSError, ValueError, KeyError):
+        return False
+    return all((d / f"leaf_{i}.npy").exists() for i in range(n))
+
+
 class CheckpointManager:
     def __init__(self, directory: str | Path, keep: int = 3):
         self.dir = Path(directory)
@@ -40,6 +72,26 @@ class CheckpointManager:
         self.keep = keep
         self._pool = ThreadPoolExecutor(max_workers=1)
         self._last: Future | None = None
+        self._recover()
+
+    def _recover(self) -> None:
+        """Sweep crash leftovers: a ``.tmp`` was never published — drop it;
+        a ``.old`` means the crash hit between rename-aside and publish —
+        promote it back unless a complete final already exists."""
+        for p in list(self.dir.iterdir()):
+            if not p.is_dir():
+                continue
+            if p.name.endswith(".tmp"):
+                shutil.rmtree(p, ignore_errors=True)
+            elif p.name.endswith(".old"):
+                final = self.dir / p.name[:-len(".old")]
+                if final.exists() and _complete(final):
+                    shutil.rmtree(p, ignore_errors=True)
+                else:
+                    if final.exists():
+                        shutil.rmtree(final, ignore_errors=True)
+                    os.replace(p, final)
+        _fsync_path(self.dir)
 
     # ---------------------------------------------------------------- save --
     def save(self, step: int, tree: Any, *, extra: dict | None = None,
@@ -57,15 +109,29 @@ class CheckpointManager:
         def write():
             tmp = self.dir / f"step_{step}.tmp"
             final = self.dir / f"step_{step}"
+            old = self.dir / f"step_{step}.old"
             if tmp.exists():
                 shutil.rmtree(tmp)
             tmp.mkdir(parents=True)
             for i, a in enumerate(host):
-                np.save(tmp / f"leaf_{i}.npy", a)
-            (tmp / "meta.json").write_text(json.dumps(meta))
+                p = tmp / f"leaf_{i}.npy"
+                np.save(p, a)
+                _fsync_path(p)
+            mp = tmp / "meta.json"
+            mp.write_text(json.dumps(meta))
+            _fsync_path(mp)
+            _fsync_path(tmp)
+            # never delete the published copy before the new one lands:
+            # rename it aside, publish, then drop the aside — a crash in
+            # any window leaves either the old or the new step recoverable
             if final.exists():
-                shutil.rmtree(final)
+                if old.exists():
+                    shutil.rmtree(old)
+                os.replace(final, old)
             os.replace(tmp, final)
+            _fsync_path(self.dir)
+            if old.exists():
+                shutil.rmtree(old, ignore_errors=True)
             self._gc()
             return step
 
@@ -87,9 +153,13 @@ class CheckpointManager:
 
     # ------------------------------------------------------------- restore --
     def steps(self) -> list[int]:
+        """Published, *complete* steps only — a torn directory (crash or
+        truncation after publish) is invisible here, so ``latest_step``
+        and default restore silently fall back to the newest good one."""
         return sorted(int(p.name.split("_")[1]) for p in self.dir.iterdir()
                       if p.is_dir() and p.name.startswith("step_")
-                      and not p.name.endswith(".tmp"))
+                      and not p.name.endswith((".tmp", ".old"))
+                      and _complete(p))
 
     def latest_step(self) -> int | None:
         s = self.steps()
@@ -106,6 +176,10 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = self.dir / f"step_{step}"
+        if not _complete(d):
+            raise FileNotFoundError(
+                f"checkpoint step {step} in {self.dir} is torn "
+                "(missing leaves or unreadable meta)")
         meta = json.loads((d / "meta.json").read_text())
         leaves, treedef = _flatten(like)
         assert meta["n_leaves"] == len(leaves), \

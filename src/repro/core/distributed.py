@@ -30,6 +30,14 @@ class PeerView:
 class Rack:
     """A rack of sNICs connected in a ring (plus the ToR uplink each)."""
 
+    #: migrate-back polling gives up after this many attempts; the poll
+    #: interval doubles each attempt (capped), so the budget covers
+    #: MONITOR_NS * (2**MIGRATE_BACK_ATTEMPTS - 1) of wedged-peer time
+    #: before the chain is left at the peer for good
+    MIGRATE_BACK_ATTEMPTS = 12
+    #: backoff cap: the interval stops doubling at MONITOR_NS << this
+    MIGRATE_BACK_MAX_SHIFT = 6
+
     def __init__(self, sim: EventSim, snics: list[SNIC],
                  exchange_ns: float = PAPER.EPOCH_NS * 50):
         self.sim = sim
@@ -39,6 +47,9 @@ class Rack:
         self.views: dict[str, dict[str, PeerView]] = {
             s.cfg.name: {} for s in snics}
         self.migrations: list[tuple[float, str, str, int]] = []
+        #: migrate-back polls abandoned after the bounded retry budget —
+        #: a wedged source can no longer park a migration poll forever
+        self.migrate_back_giveups = 0
         self.exchange_ns = exchange_ns
         sim.after(exchange_ns, self._exchange)
 
@@ -138,21 +149,33 @@ class Rack:
         return self.offload(src, dag_uid, prog, target=dst,
                             migrate_back=False) is not None
 
+    def _retry_migrate_back(self, src: SNIC, peer: SNIC, dag_uid: int,
+                            prog: ChainProgram, attempt: int) -> None:
+        """Re-poll with exponential backoff; bounded so a wedged source
+        (regions never freeing) cannot park the poll forever — after the
+        budget the chain simply stays at the peer and the give-up is
+        counted for the report."""
+        if attempt >= self.MIGRATE_BACK_ATTEMPTS:
+            self.migrate_back_giveups += 1
+            return
+        delay = PAPER.MONITOR_NS * (
+            1 << min(attempt, self.MIGRATE_BACK_MAX_SHIFT))
+        self.sim.after(delay, self._try_migrate_back, src, peer, dag_uid,
+                       prog, attempt + 1)
+
     def _try_migrate_back(self, src: SNIC, peer: SNIC, dag_uid: int,
-                          prog: ChainProgram) -> None:
+                          prog: ChainProgram, attempt: int = 0) -> None:
         if dag_uid not in src.remote_dags:
             return
         has_free = any(r.state == RegionState.FREE
                        for r in src.regions.regions)
         if not has_free:
-            self.sim.after(PAPER.MONITOR_NS, self._try_migrate_back, src,
-                           peer, dag_uid, prog)
+            self._retry_migrate_back(src, peer, dag_uid, prog, attempt)
             return
         res = src.regions.launch(prog, self.sim.now,
                                  allow_context_switch=False)
         if res.region is None:
-            self.sim.after(PAPER.MONITOR_NS, self._try_migrate_back, src,
-                           peer, dag_uid, prog)
+            self._retry_migrate_back(src, peer, dag_uid, prog, attempt)
             return
         if res.did_pr:
             self.sim.at(res.ready_ns, src.regions.finish_pr, res.region)

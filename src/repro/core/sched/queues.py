@@ -89,6 +89,23 @@ class TenantQueue:
         self.items.appendleft(QueueItem(payload, cost, costs, now))
         self.backlog_cost += cost
 
+    def shed(self, cost_limit: float) -> tuple[int, float]:
+        """Backpressure: drop from the TAIL until the standing backlog is
+        within ``cost_limit`` (newest work goes first — the head kept its
+        place in line).  Both ``backlog_cost`` and ``granted_cost`` shrink
+        by the shed cost, so the credit conservation law
+        (granted == served + backlog) holds through a shed; drops are
+        counted, never silent.  Returns ``(items, cost)`` shed."""
+        n, cost = 0, 0.0
+        while self.items and self.backlog_cost > cost_limit + COST_EPS:
+            item = self.items.pop()
+            self.backlog_cost -= item.cost
+            self.granted_cost -= item.cost
+            self.drops += 1
+            n += 1
+            cost += item.cost
+        return n, cost
+
     def head(self) -> QueueItem | None:
         return self.items[0] if self.items else None
 

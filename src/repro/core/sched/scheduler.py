@@ -95,6 +95,27 @@ class FairScheduler:
         self.space.weights[name] = weight
         return q
 
+    def remove_tenant(self, name: str) -> tuple[int, float]:
+        """Tenant churn: drop the tenant's queue (its backlog is shed and
+        counted) and forget its weight.  Safe mid-run — the WDRR ring is
+        the queues dict itself and deficit state lives on the queue, so
+        nothing else references the departed tenant.  Returns the
+        ``(items, cost)`` shed with the queue."""
+        q = self.queues.pop(name, None)
+        self.space.weights.pop(name, None)
+        self.space.admission.demand.pop(name, None)
+        if q is None:
+            return (0, 0.0)
+        return q.shed(0.0)
+
+    def shed_backlog(self, tenant: str, cost_limit: float) -> tuple[int, float]:
+        """Cap one tenant's standing backlog (graceful degradation when
+        fleet capacity < demand); see :meth:`TenantQueue.shed`."""
+        q = self.queues.get(tenant)
+        if q is None:
+            return (0, 0.0)
+        return q.shed(cost_limit)
+
     @property
     def weights(self) -> dict[str, float]:
         return {n: q.weight for n, q in self.queues.items()}

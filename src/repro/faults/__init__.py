@@ -1,0 +1,22 @@
+"""Seeded, deterministic fault injection for the multi-tenant fleet.
+
+Usage::
+
+    from repro.faults import FaultPlan
+    plan = FaultPlan(seed=7).crash(shard=2, epoch=40)
+    sb = ShardedBackend(shards, fault_plan=plan)
+
+Every backend honors an attached :class:`~repro.faults.state.FaultState`
+(crash/hang/degrade/nt-exception/drop/corrupt); ``ShardedBackend`` turns
+probe misses into failover.  See README "Resilience & fault injection".
+"""
+from .errors import (FaultError, NTKernelFault, Overloaded, ShardCrashed,
+                     ShardHung)
+from .injector import FaultInjector, faults_of
+from .plan import FaultEvent, FaultPlan
+from .state import FaultState
+
+__all__ = [
+    "FaultError", "ShardCrashed", "ShardHung", "NTKernelFault", "Overloaded",
+    "FaultEvent", "FaultPlan", "FaultState", "FaultInjector", "faults_of",
+]

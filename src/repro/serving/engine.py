@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.analysis import invariants as _sanitize
 from repro.core.policy import StepScaler
+from repro.faults import Overloaded
 from repro.core.sched import FairScheduler, SchedConfig, SpaceShare
 from repro.core.vmem import OutOfMemory, VirtualMemory
 from repro.models import model as MD
@@ -67,6 +68,11 @@ class EngineConfig:
     enable_cache_nt: bool = True
     scale_up_backlog: float = 2.0       # backlog/capacity ratio to scale out
     scale_down_idle: float = 0.25
+    #: admission ceiling on *pending* requests; beyond it submit() raises
+    #: :class:`repro.faults.Overloaded` with a retry-after hint instead of
+    #: letting the backlog grow without bound and stall every tenant
+    #: (None = the engine's historical accept-everything behavior)
+    max_pending: int | None = None
 
 
 class ResponseCacheNT:
@@ -126,6 +132,8 @@ class Engine:
         self.cache_nt = ResponseCacheNT(ecfg.cache_entries)
         self.rid = 0
         self.epoch_count = 0
+        #: submissions rejected by the max_pending overload gate
+        self.rejected = 0
         # slots: rid -> (cache, pos, request)
         self.slots: list = []
 
@@ -167,6 +175,10 @@ class Engine:
     def add_tenant(self, tenant: str, weight: float = 1.0) -> None:
         self.sched.add_tenant(tenant, weight)
 
+    def remove_tenant(self, tenant: str) -> tuple[int, float]:
+        """Tenant churn: drop the tenant's queue (pending requests shed)."""
+        return self.sched.remove_tenant(tenant)
+
     @property
     def weights(self) -> dict[str, float]:
         return self.sched.weights
@@ -176,8 +188,24 @@ class Engine:
         pages = (toks + self.ecfg.page_tokens - 1) // self.ecfg.page_tokens
         return {"tokens": float(toks), "pages": float(pages)}
 
+    def retry_after(self) -> float:
+        """How long a rejected client should wait before resubmitting: the
+        number of admission epochs needed to drain the standing backlog,
+        paced at one epoch's worth of requests each (a coarse but monotone
+        estimate — deeper backlog, longer hint)."""
+        pending = self.sched.pending()
+        epochs = max(1.0, pending / max(self.ecfg.epoch_requests, 1))
+        return 0.05 * epochs
+
     # ------------------------------------------------------------ ingress --
     def submit(self, tenant: str, prompt: np.ndarray, max_new: int = 16):
+        if self.ecfg.max_pending is not None and \
+                self.sched.pending() >= self.ecfg.max_pending:
+            self.rejected += 1
+            raise Overloaded(self.retry_after(),
+                             f"engine over capacity ({self.sched.pending()} "
+                             f"pending >= max_pending="
+                             f"{self.ecfg.max_pending})")
         self.rid += 1
         req = Request(self.rid, tenant, np.asarray(prompt, np.int32),
                       max_new, t_submit=time.time())
