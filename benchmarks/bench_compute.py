@@ -16,13 +16,25 @@ run a chain:
 Writes ``BENCH_compute.json`` at the repo root (the perf-trajectory file)
 and returns a flat summary for ``benchmarks.run``.
 
+A fourth way feeds the same continuous-inject workload through the
+**streaming engine** (``stream`` section of the JSON): batch-synchronous is
+``inject`` + ``run()`` per batch (one device sync per batch); streaming is
+``inject_stream`` with ``epoch_batches=1`` — identical dispatch granularity,
+but transfers stage through the reusable dispatch ring and syncs happen only
+on ring wrap, so transfer and compute overlap.  The binding checks: sustained
+streaming pkts/s >= 1.3x batch-synchronous on the same backend/path, ring
+allocations bounded by the in-flight window (zero steady-state allocations),
+and streaming output bit-exact with the batch path.
+
 Modes: ``--smoke`` = tiny batches, CI-friendly (Pallas interpret mode on
 CPU: the megakernel *numbers* are meaningless off-TPU — only the schema and
 bit-exactness checks are binding there, and the JSON says so); ``--full`` =
 real sweep (meaningful on a TPU backend).  Default: full on TPU, smoke
-elsewhere.
+elsewhere.  ``--stream`` runs ONLY the streaming section and writes
+``BENCH_compute_stream.json`` (the cheap CI smoke for the streaming lane).
 
 CLI:  PYTHONPATH=src python -m benchmarks.bench_compute [--smoke|--full]
+                                                        [--stream]
                                                         [--out PATH]
 Exit codes: 0 ok, 1 schema/bit-exactness failure, 2 bad usage.
 """
@@ -39,6 +51,7 @@ import numpy as np
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 DEFAULT_OUT = REPO_ROOT / "BENCH_compute.json"
+DEFAULT_STREAM_OUT = REPO_ROOT / "BENCH_compute_stream.json"
 CHAIN = ("firewall", "nat", "chacha20")     # has a registered megakernel
 CHAINS = {"vpc": CHAIN,
           "fw_nat": ("firewall", "nat")}    # no megakernel: fallback only
@@ -102,6 +115,78 @@ def _bench_backend(use_fused, h, p, params, n_batches, chain=CHAIN):
         plat.run()                           # one sync per run
     dt = time.perf_counter() - t0
     return dt, be.stats["traces"], plat.report()["bench"].outputs[0]
+
+
+def _bench_stream(h, p, params, n_batches, ring_depth=4, max_inflight=None,
+                  devices=None):
+    """Continuous-inject workload through the streaming engine,
+    ``epoch_batches=1`` so dispatch granularity matches the batch-sync
+    comparator (one group per inject — the speedup is pipelining, not
+    coalescing)."""
+    from repro.api import ComputeBackend, Platform, VPC_SPECS, nt_chain
+    be = ComputeBackend(use_fused=False, stream=True, ring_depth=ring_depth,
+                        max_inflight=max_inflight, device=devices)
+    plat = Platform(be, specs=VPC_SPECS)
+    dep = plat.tenant("bench").deploy(nt_chain(*CHAIN), params=params)
+    dep.inject(headers=h, payload=p)
+    plat.run()                               # warmup/compile
+    be.reset_window()
+    warm_allocs = be.ring.allocs
+    src = (("bench", dep.uid, {"headers": h, "payload": p})
+           for _ in range(n_batches))
+    t0 = time.perf_counter()
+    served = be.inject_stream(src, epoch_batches=1)
+    dt = time.perf_counter() - t0
+    ring = be.ring.stats()
+    ring["max_inflight"] = be.max_inflight
+    ring["steady_allocs"] = ring["allocs"] - warm_allocs
+    assert served == n_batches
+    return dt, ring, plat.report()["bench"].outputs[0]
+
+
+def bench_stream(smoke: bool, params=None) -> dict:
+    """The ``stream`` section: batch-synchronous vs streaming on the same
+    continuous-inject workload, per batch size, plus a multi-device
+    round-robin variant at the largest batch."""
+    from repro.serving.vpc import make_packets
+    params = params or _mk_params()
+    batch_sizes = [64, 256] if smoke else [1024, 4096]
+    n_batches = 32 if smoke else 64
+    rows = []
+    for batch in batch_sizes:
+        h, p = make_packets(batch, seed=batch)
+        dt_b, _, out_b = _bench_backend(False, h, p, params, n_batches)
+        dt_s, ring, out_s = _bench_stream(h, p, params, n_batches)
+        bitexact = all(
+            np.array_equal(np.asarray(out_b[k]), np.asarray(out_s[k]))
+            for k in ("allow", "headers", "payload"))
+        rows.append({
+            "batch": batch, "n_batches": n_batches,
+            "batch_pkts_per_s": round(batch * n_batches / dt_b, 1),
+            "stream_pkts_per_s": round(batch * n_batches / dt_s, 1),
+            "stream_gbps": round(
+                batch * n_batches * WIRE_BYTES_PER_PKT * 8 / dt_s / 1e9, 4),
+            "speedup": round(dt_b / dt_s, 3),
+            "ring": ring, "bitexact": bitexact,
+        })
+    # multi-device round-robin within one shard: on a single-device host the
+    # same device is listed twice — exercises the RR path, not a 2x claim
+    batch = batch_sizes[-1]
+    h, p = make_packets(batch, seed=batch)
+    dt_rr, ring_rr, out_rr = _bench_stream(
+        h, p, params, n_batches, devices=[jax.devices()[0]] * 2)
+    rr_bitexact = all(            # out_b: batch-sync output at this size
+        np.array_equal(np.asarray(out_b[k]), np.asarray(out_rr[k]))
+        for k in ("allow", "headers", "payload"))
+    return {
+        "rows": rows,
+        "round_robin": {
+            "batch": batch, "n_devices": 2,
+            "pkts_per_s": round(batch * n_batches / dt_rr, 1),
+            "ring": ring_rr, "bitexact": bool(rr_bitexact),
+        },
+        "speedup_stream_vs_batch": max(r["speedup"] for r in rows),
+    }
 
 
 def _bench_cache(params, sizes):
@@ -178,6 +263,8 @@ def bench_compute(smoke: bool | None = None,
         params, ([3, 10, 100, 7, 9] * 10) if smoke
         else ([100, 1000, 4000, 900, 70] * 10))
 
+    stream = bench_stream(smoke, params)
+
     def rate(path, b):
         return next(r["pkts_per_s"] for r in sweep
                     if r["path"] == path and r["batch"] == b
@@ -192,12 +279,14 @@ def bench_compute(smoke: bool | None = None,
         "wire_bytes_per_pkt": WIRE_BYTES_PER_PKT,
         "sweep": sweep,
         "cache": cache,
+        "stream": stream,
         "bitexact": bitexact,
         "max_batch": batch,
         "speedup_fused_vs_per_nt": round(
             rate("fused", batch) / rate("per_nt", batch), 3),
         "speedup_composed_vs_per_nt": round(
             rate("composed", batch) / rate("per_nt", batch), 3),
+        "speedup_stream_vs_batch": stream["speedup_stream_vs_batch"],
         "note": ("interpret-mode megakernel: fused numbers are NOT "
                  "meaningful off-TPU; schema + bitexact + cache are the "
                  "binding checks here" if backend != "tpu" else
@@ -207,12 +296,44 @@ def bench_compute(smoke: bool | None = None,
     return res
 
 
+def check_stream_section(stream: dict) -> list[str]:
+    """The streaming contract, binding on every backend: >= 1.3x sustained
+    over batch-synchronous, bit-exact, and ring allocations bounded by the
+    in-flight window (zero steady-state allocations)."""
+    errs = []
+    for k in ("rows", "round_robin", "speedup_stream_vs_batch"):
+        if k not in stream:
+            errs.append(f"stream section missing key {k!r}")
+    if errs:
+        return errs
+    if stream["speedup_stream_vs_batch"] < 1.3:
+        errs.append(
+            f"streaming speedup {stream['speedup_stream_vs_batch']} < 1.3x "
+            "over batch-synchronous")
+    for row in stream["rows"]:
+        if not row.get("bitexact"):
+            errs.append(f"stream output not bit-exact at batch "
+                        f"{row.get('batch')}")
+        ring = row.get("ring", {})
+        bound = ring.get("max_inflight", 0) + 1
+        if ring.get("steady_allocs", 1e9) > bound:
+            errs.append(
+                f"ring leak at batch {row.get('batch')}: "
+                f"{ring.get('steady_allocs')} steady-state allocations "
+                f"(> in-flight window {bound}) over "
+                f"{row.get('n_batches')} batches")
+    if not stream["round_robin"].get("bitexact"):
+        errs.append("multi-device round-robin output not bit-exact")
+    return errs
+
+
 def check_schema(res: dict) -> list[str]:
     """The contract CI enforces (interpret mode: schema + bit-exactness +
     compile-count, not speed)."""
     errs = []
     for k in ("bench", "mode", "backend", "chain", "sweep", "cache",
-              "bitexact", "speedup_fused_vs_per_nt"):
+              "stream", "bitexact", "speedup_fused_vs_per_nt",
+              "speedup_stream_vs_batch"):
         if k not in res:
             errs.append(f"missing key {k!r}")
     if not res.get("bitexact"):
@@ -231,7 +352,44 @@ def check_schema(res: dict) -> list[str]:
         if res.get("speedup_fused_vs_per_nt", 0.0) < 1.5 and \
                 res.get("max_batch", 0) >= 4096:
             errs.append("fused speedup < 1.5x on a compiled backend")
+    errs.extend(check_stream_section(res.get("stream", {})))
     return errs
+
+
+def bench_compute_stream(smoke: bool | None = None,
+                         out_path: Path | str = DEFAULT_STREAM_OUT) -> dict:
+    """Stream-only benchmark (the ``--stream`` CLI mode / CI smoke step):
+    just the streaming section, no per-NT/fused sweep."""
+    backend = jax.default_backend()
+    if smoke is None:
+        smoke = backend != "tpu"
+    res = {
+        "bench": "bench_compute_stream",
+        "mode": "smoke" if smoke else "full",
+        "backend": backend,
+        "chain": " >> ".join(CHAIN),
+        "wire_bytes_per_pkt": WIRE_BYTES_PER_PKT,
+        "stream": bench_stream(smoke),
+    }
+    res["speedup_stream_vs_batch"] = \
+        res["stream"]["speedup_stream_vs_batch"]
+    Path(out_path).write_text(json.dumps(res, indent=1))
+    return res
+
+
+def bench_compute_stream_summary() -> dict:
+    """Entry for benchmarks.run: flat keys only."""
+    res = bench_compute_stream()
+    errs = check_stream_section(res["stream"])
+    if errs:
+        raise RuntimeError("; ".join(errs))
+    flat = {k: v for k, v in res.items() if not isinstance(v, (list, dict))}
+    for row in res["stream"]["rows"]:
+        flat[f"stream_b{row['batch']}_pkts_per_s"] = row["stream_pkts_per_s"]
+        flat[f"batch_b{row['batch']}_pkts_per_s"] = row["batch_pkts_per_s"]
+        flat[f"speedup_b{row['batch']}"] = row["speedup"]
+    flat["rr_pkts_per_s"] = res["stream"]["round_robin"]["pkts_per_s"]
+    return flat
 
 
 def bench_compute_summary() -> dict:
@@ -252,30 +410,52 @@ def bench_compute_summary() -> dict:
 def main(argv=None) -> int:
     args = list(argv if argv is not None else sys.argv[1:])
     smoke: bool | None = None
-    out = DEFAULT_OUT
+    stream_only = False
+    out: Path | None = None
     while args:
         a = args.pop(0)
         if a == "--smoke":
             smoke = True
         elif a == "--full":
             smoke = False
+        elif a == "--stream":
+            stream_only = True
         elif a == "--out":
             if not args:
                 print("--out needs a path")
                 return 2
             out = Path(args.pop(0))
         else:
-            print(f"unknown flag {a!r}; known: --smoke --full --out PATH")
+            print(f"unknown flag {a!r}; known: --smoke --full --stream "
+                  "--out PATH")
             return 2
-    res = bench_compute(smoke=smoke, out_path=out)
+    if stream_only:
+        res = bench_compute_stream(
+            smoke=smoke, out_path=out or DEFAULT_STREAM_OUT)
+        for row in res["stream"]["rows"]:
+            print(f"bench_compute_stream,b{row['batch']}_stream_pkts_per_s,"
+                  f"{row['stream_pkts_per_s']}")
+            print(f"bench_compute_stream,b{row['batch']}_speedup,"
+                  f"{row['speedup']}")
+        print(f"bench_compute_stream,speedup_stream_vs_batch,"
+              f"{res['speedup_stream_vs_batch']}")
+        print(f"bench_compute_stream,out,{out or DEFAULT_STREAM_OUT}")
+        errs = check_stream_section(res["stream"])
+        if errs:
+            print("FAIL: " + "; ".join(errs))
+            return 1
+        return 0
+    res = bench_compute(smoke=smoke, out_path=out or DEFAULT_OUT)
     for row in res["sweep"]:
         print(f"bench_compute,{row['chain']}_{row['path']}_b{row['batch']}"
               f"_pkts_per_s,{row['pkts_per_s']}")
     print(f"bench_compute,speedup_fused_vs_per_nt,"
           f"{res['speedup_fused_vs_per_nt']}")
+    print(f"bench_compute,speedup_stream_vs_batch,"
+          f"{res['speedup_stream_vs_batch']}")
     print(f"bench_compute,cache_compiles,{res['cache']['compiles']}")
     print(f"bench_compute,bitexact,{res['bitexact']}")
-    print(f"bench_compute,out,{out}")
+    print(f"bench_compute,out,{out or DEFAULT_OUT}")
     errs = check_schema(res)
     if errs:
         print("FAIL: " + "; ".join(errs))

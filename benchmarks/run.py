@@ -15,7 +15,8 @@ import time
 from pathlib import Path
 
 from benchmarks import figures
-from benchmarks.bench_compute import bench_compute_summary
+from benchmarks.bench_compute import (bench_compute_stream_summary,
+                                      bench_compute_summary)
 from benchmarks.bench_fairness import bench_fairness_summary
 from benchmarks.bench_resilience import bench_resilience_summary
 from benchmarks.bench_sharding import bench_sharding_summary
@@ -24,6 +25,7 @@ OUT = Path(__file__).resolve().parents[1] / "experiments" / "bench"
 
 BENCHES = {
     "bench_compute": bench_compute_summary,
+    "bench_compute_stream": bench_compute_stream_summary,
     "bench_fairness": bench_fairness_summary,
     "bench_resilience": bench_resilience_summary,
     "bench_sharding": bench_sharding_summary,

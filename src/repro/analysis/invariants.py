@@ -28,8 +28,10 @@ wrapped in :class:`InvariantViolation`):
   - **I-STORE**: the sNIC packet store never holds negative bytes, and
     every live NT instance's credit count stays within [0, cfg.credits].
   - **I-BATCH**: on the compute backend, batches injected == batches
-    completed + batches queued + batches shed (backpressure/tenant-churn
-    sheds are counted, never silent).
+    completed + batches queued + batches in flight + batches shed
+    (backpressure/tenant-churn sheds are counted, never silent; in-flight
+    counts dispatch-ring slots launched but not yet drained by the
+    streaming engine — zero at every batch-mode epoch boundary).
   - **I-FAILOVER**: on a fleet coordinator with failover armed, every
     routed deployment points at a healthy shard (unless it was counted
     lost because no healthy shard remained), and the loss/replay
@@ -164,13 +166,21 @@ def compute_diags(backend, where: str) -> list[Diagnostic]:
     completed = backend.completed_batches
     queued = backend.sched.pending()
     shed = getattr(backend, "shed_batches", 0)
-    if injected != completed + queued + shed:
+    in_flight = getattr(backend, "inflight_batches", 0)
+    if in_flight < 0:
+        out.append(_d(
+            "I-BATCH", where,
+            f"in-flight ring count went negative ({in_flight})",
+            "every _stage_group increment must pair with exactly one "
+            "_retire decrement"))
+    if injected != completed + queued + shed + in_flight:
         out.append(_d(
             "I-BATCH", where,
             f"batch leak: injected {injected} != completed {completed} + "
-            f"queued {queued} + shed {shed}",
+            f"queued {queued} + shed {shed} + in_flight {in_flight}",
             "every drained item must be dispatched and counted exactly "
-            "once per run(); every shed item must bump shed_batches"))
+            "once per run(); every shed item must bump shed_batches; every "
+            "ring slot launched must retire"))
     return out
 
 

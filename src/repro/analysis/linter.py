@@ -8,7 +8,16 @@ Rules (subjects are ``path:line``; suppress a line with ``# noqa: L-<ID>``):
     ``np.asarray`` / ``np.array`` on device values, or ``int()`` /
     ``float()`` over a subscripted array — each iteration blocks on the
     device, serializing the loop (the PR-2 throughput lesson: one sync per
-    run, not per item).
+    run, not per item).  Ring-aware: a ``block_until_ready`` whose operand
+    names a dispatch-ring entry (``ring``/``slot``/``inflight``) is the
+    streaming engine's *bounded* per-slot drain — one sync per ring wrap
+    by design, ``max_inflight`` launches deep — and is not flagged.
+  - **L-RING** (warning): ``jax.device_put`` inside a loop in a
+    dispatch-path file with no dispatch-ring slot in sight — every
+    iteration ships a fresh host buffer to the device instead of cycling a
+    pre-allocated ring slot, so the steady state allocates per item (the
+    PR-9 streaming lesson).  Exempt when the call's operands name a ring
+    slot (``ring``/``slot``/``inflight``).
   - **L-JITCACHE** (error): ``jax.jit(...)`` called inside a loop — every
     iteration makes a fresh jit instance with an empty compile cache, so
     the program retraces per iteration instead of once.
@@ -44,8 +53,28 @@ _NONDET_CALLS = {("time", "time"), ("time", "perf_counter"),
                  ("random", "random"), ("random", "randint"),
                  ("random", "uniform"), ("random", "choice"),
                  ("random", "shuffle"), ("random", "sample")}
-#: path fragments that mark a file as dispatch-path for L-DONATE
+#: path fragments that mark a file as dispatch-path for L-DONATE / L-RING
 _DISPATCH_HINTS = ("backend", "engine", "kernels", "serving")
+#: identifier fragments that mark a value as a dispatch-ring entry
+_RING_HINTS = ("ring", "slot", "inflight", "in_flight")
+
+
+def _touches_ring(node: ast.AST) -> bool:
+    """True when any identifier in the subtree names a dispatch-ring entry
+    (``ring``/``slot``/``inflight``) — the lexical signal that a sync or
+    transfer is ring-scoped, i.e. bounded by the in-flight window rather
+    than per-item."""
+    for sub in ast.walk(node):
+        name = None
+        if isinstance(sub, ast.Name):
+            name = sub.id
+        elif isinstance(sub, ast.Attribute):
+            name = sub.attr
+        elif isinstance(sub, ast.keyword):
+            name = sub.arg
+        if name and any(h in name.lower() for h in _RING_HINTS):
+            return True
+    return False
 
 
 def _is_sync_subscript(node: ast.Subscript) -> bool:
@@ -117,13 +146,16 @@ class _Visitor(ast.NodeVisitor):
 
         if self._in_loop():
             if (isinstance(node.func, ast.Attribute)
-                    and node.func.attr in _SYNC_ATTRS):
+                    and node.func.attr in _SYNC_ATTRS
+                    and not (node.func.attr == "block_until_ready"
+                             and _touches_ring(node))):
                 self._emit(
                     "L-HOSTSYNC", Severity.ERROR, node,
                     f".{node.func.attr}() inside a loop blocks on the "
                     "device every iteration",
                     "hoist the sync out of the loop: batch the values and "
-                    "synchronize once after it")
+                    "synchronize once after it; a dispatch-ring drain "
+                    "should name its ring slot")
             elif dotted and (dotted[0], dotted[-1]) in _SYNC_CALLS \
                     and self.is_jax_file:
                 self._emit(
@@ -149,6 +181,17 @@ class _Visitor(ast.NodeVisitor):
                     "instance (empty compile cache) every iteration",
                     "jit once outside the loop, or memoize per static "
                     "shape like the bucketed compile cache does")
+            if dotted and dotted[:2] == ("jax", "device_put") \
+                    and any(h in self.relpath for h in _DISPATCH_HINTS) \
+                    and not _touches_ring(node):
+                self._emit(
+                    "L-RING", Severity.WARNING, node,
+                    "jax.device_put inside a loop on the dispatch path "
+                    "allocates and ships a fresh host buffer every "
+                    "iteration",
+                    "stage through a pre-allocated dispatch-ring slot "
+                    "(name it ring/slot/inflight) so the steady state "
+                    "reuses buffers, or hoist the transfer")
 
         if dotted and dotted[:2] == ("jax", "jit") and not self._in_loop() \
                 and not any(kw.arg == "donate_argnums"

@@ -12,9 +12,11 @@ Backends: SimBackend (event-driven sNIC device model), ComputeBackend
 (NT names bound to batched JAX/Pallas kernels; a matching linear chain
 dispatches to a fused Pallas megakernel, everything else becomes one
 XLA-fused jitted program — either way batches are bucket-padded, coalesced
-and run with a single device sync per run()), ServeBackend (multi-tenant
-LLM serving engine), and ShardedBackend (a fleet of any of the above behind
-one Platform: consolidation-driven placement, cross-shard fair scheduling,
+and run with a single device sync per run(), or pipelined through the
+streaming dispatch ring with `stream=True` / `inject_stream` for
+transfer/compute overlap), ServeBackend (multi-tenant LLM serving engine),
+and ShardedBackend (a fleet of any of the above behind one Platform:
+consolidation-driven placement, cross-shard fair scheduling,
 deploy-on-new + drain-old rebalancing — `Platform([be0, be1])` wraps
 automatically).
 """
@@ -22,7 +24,7 @@ from .backend import (Backend, PlatformReport,  # noqa: F401
                       TenantReport, merge_reports)
 from .compute_backend import (FUSED_KERNELS, VPC_SPECS,  # noqa: F401
                               WIRE_FIELDS, ComputeBackend, ComputeNT,
-                              bucket_size)
+                              DispatchRing, bucket_size)
 from .dag import (DagError, DagExpr, compile_dag, nt,  # noqa: F401
                   nt_chain, validate_dag)
 from .placement import PlacementDecision, Placer  # noqa: F401

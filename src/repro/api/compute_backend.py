@@ -48,6 +48,26 @@ to the host runtime):
     backend supports it.  The bucket-padding step always materializes fresh
     buffers, so caller-owned arrays are never donated (inject the same
     arrays twice and both runs see identical bits).
+  - **Streaming engine** (``run(stream=True)`` / :meth:`inject_stream` /
+    ``ComputeBackend(stream=True)``): the pipelined alternative to the
+    batch-synchronous drain.  Batches flow through a **dispatch ring** of
+    pre-allocated, reusable staging slots per (bucket, signature) — steady
+    state fills ring slots instead of materializing fresh bucket buffers —
+    and each slot's ``jax.device_put`` (the async host->device transfer of
+    the *next* group) overlaps the previous group's still-running kernel.
+    The single end-of-run sync becomes a bounded in-flight window
+    (``max_inflight``): a slot is drained with its own ``block_until_ready``
+    only when the ring wraps, so transfer, compute, and result slicing
+    pipeline instead of serializing.  With a device *list*, dispatch groups
+    round-robin across the devices of one shard; stream-mode ChaCha stays
+    bit-exact because per-packet counters are assigned when an item enters
+    the ring (fair drain order — deterministic), never at completion time.
+    The throughput window for a streaming run is first-dispatch ->
+    last-drain.  ``inject_stream`` services a continuous inject source
+    epoch-by-epoch through the scheduler's stream-credit window
+    (:meth:`repro.core.sched.FairScheduler.stream_window`) instead of
+    draining a static backlog — scheduler grants shape the stream
+    in-flight, the Wave-style push-down.
 
 Fork/join semantics mirror the sync buffer (§4.2): every branch of a stage
 reads the stage's input state; the join merges each branch's declared
@@ -61,11 +81,13 @@ denied packets keep their original header and leave with a zeroed payload
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Iterable, Iterator
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analysis import invariants as _sanitize
 from repro.core.nt import GBPS, NTDag, NTSpec
@@ -88,7 +110,13 @@ _MIN_BUCKET = 8
 
 
 def bucket_size(n: int) -> int:
-    """Smallest power-of-two bucket (>= _MIN_BUCKET) holding ``n`` rows."""
+    """Smallest power-of-two bucket (>= _MIN_BUCKET) holding ``n`` rows.
+
+    Exact fits stay in their bucket (``bucket_size(2**k) == 2**k`` — the
+    ring-wrap edge where an inject exactly fills the last ring slot must
+    not spill into the next bucket and re-trace)."""
+    if n < 0:
+        raise ValueError(f"bucket_size needs n >= 0, got {n}")
     b = _MIN_BUCKET
     while b < n:
         b <<= 1
@@ -150,10 +178,18 @@ def _nat_nt(state, params):
 
 
 def _chacha_nt(state, params):
+    ctr = state.get("ctr")
+    if ctr is None and "ctr0" in state:
+        # per-slot counter base: a traced scalar expanded ON DEVICE inside
+        # the jitted program, so a streaming ring slot carries one u32
+        # instead of a bucket-sized counter array (pad rows get counters
+        # past the batch; their output is sliced off like any pad row)
+        ctr = jnp.asarray(state["ctr0"], jnp.uint32) + \
+            jnp.arange(state["payload"].shape[0], dtype=jnp.uint32)
     return {"payload": chacha20_xor_jnp(state["payload"], params["key"],
                                         params["nonce"],
                                         params.get("counter0", 1),
-                                        ctr=state.get("ctr"))}
+                                        ctr=ctr)}
 
 
 def _chacha_prep(n, params):
@@ -164,8 +200,16 @@ def _chacha_prep(n, params):
 def _chacha_stream(n, params, state):
     """Stream-mode ``ctr``: a running keystream counter that continues
     across batches (and, via export/import_state + CheckpointManager,
-    across a crash/recover cycle)."""
+    across a crash/recover cycle).  With ``params["scalar_ctr"]`` the
+    per-packet array is replaced by a scalar ``ctr0`` base expanded inside
+    the kernel — the per-slot counter plumbing the dispatch ring uses so a
+    steady-state inject moves one u32, not an (N,) array.  Scalar-ctr
+    batches never coalesce (a 0-d field is its own dispatch signature), so
+    each keeps exactly its own counter run and the ciphertext stays
+    bit-exact with the array path."""
     nxt = int(state.get("next_ctr", params.get("counter0", 1)))
+    if params.get("scalar_ctr"):
+        return ({"ctr0": jnp.uint32(nxt)}, {"next_ctr": nxt + n})
     return ({"ctr": jnp.uint32(nxt) + jnp.arange(n, dtype=jnp.uint32)},
             {"next_ctr": nxt + n})
 
@@ -217,7 +261,10 @@ def _vpc_fused_factory(params: dict) -> Callable | None:
             state["headers"], state["payload"], params["firewall"]["rules"],
             ch["key"], ch["nonce"],
             nat_ip=params.get("nat", {}).get("nat_ip", 0x0A000001),
-            counter0=ch.get("counter0", 1), ctr=state.get("ctr"))
+            # ctr0 is the streaming ring's per-slot counter base (a traced
+            # scalar; the kernel wrapper expands it on device)
+            counter0=state.get("ctr0", ch.get("counter0", 1)),
+            ctr=state.get("ctr"))
         return {**state, "allow": allow, "headers": hout, "payload": pout}
 
     return program
@@ -260,6 +307,68 @@ def _rows(batch: dict) -> int:
         if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1:
             return int(v.shape[0])
     return 0
+
+
+# ------------------------------------------------------------ dispatch ring --
+@dataclass
+class _RingSlot:
+    """One pre-allocated staging slot: host buffers sized to a bucket, one
+    per array field of the dispatch signature (plus the ``valid`` row
+    mask).  The slot is filled in place, shipped with one async
+    ``jax.device_put`` of the whole dict (the device copy is what the
+    jitted program donates), and returned to the ring's free list when its
+    in-flight entry drains — so steady state allocates nothing."""
+    key: tuple
+    staging: dict[str, np.ndarray]
+
+
+class DispatchRing:
+    """Pool of reusable staging slots keyed by (bucket, array signature).
+
+    ``allocs`` counts real slot materializations; once the pipeline warms
+    up (at most ``max_inflight + 1`` slots per key are ever live) every
+    acquire is a reuse — the zero-steady-state-allocation property the
+    streaming tests assert."""
+
+    def __init__(self, depth: int = 4):
+        self.depth = int(depth)
+        self._free: dict[tuple, list[_RingSlot]] = {}
+        self.allocs = 0
+        self.reuses = 0
+
+    def acquire(self, bucket: int,
+                fields: list[tuple[str, tuple[int, ...], np.dtype]],
+                ) -> _RingSlot:
+        key = (bucket, tuple((k, trail, str(dt)) for k, trail, dt in fields))
+        free = self._free.get(key)
+        if free:
+            self.reuses += 1
+            return free.pop()
+        self.allocs += 1
+        staging = {k: np.zeros((bucket,) + trail, dt)
+                   for k, trail, dt in fields}
+        staging["valid"] = np.zeros((bucket,), bool)
+        return _RingSlot(key, staging)
+
+    def release(self, slot: _RingSlot) -> None:
+        self._free.setdefault(slot.key, []).append(slot)
+
+    def stats(self) -> dict:
+        return {"allocs": self.allocs, "reuses": self.reuses,
+                "depth": self.depth,
+                "free_slots": sum(len(v) for v in self._free.values())}
+
+
+@dataclass
+class _InFlight:
+    """A launched-but-undrained dispatch group: the ring entry the bounded
+    in-flight window retires (per-slot sync) when the ring wraps."""
+    dep: _Deployment
+    orders: list[int]
+    sizes: list[int]
+    out: dict
+    slot: _RingSlot | None
+    enq: list[tuple[str, float]]          # (tenant, enqueued_at) per batch
 
 
 def _signature(batch: dict):
@@ -308,6 +417,20 @@ def _corrupt_batch(batch: dict, rng) -> dict:
     return out
 
 
+def _slice_result(out: dict, off: int, s: int) -> dict:
+    """Un-coalesce one batch's rows out of a dispatched group's output,
+    dropping the pad/validity scaffolding."""
+    res = {}
+    for k, v in out.items():
+        if k == "valid":
+            continue
+        if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1:
+            res[k] = v[off:off + s]
+        else:
+            res[k] = v
+    return res
+
+
 def _pad_to(x, b: int):
     """Pad the packet axis to ``b`` rows.  Always materializes a fresh
     buffer (even when no padding is needed, and for 0-d arrays) so the
@@ -327,19 +450,44 @@ class ComputeBackend:
                  use_fused: bool | None = None, donate: bool = True,
                  quantum_bytes: float = 8 * 1500.0,
                  name: str | None = None, device=None,
-                 capacity_gbps: float = 100.0):
+                 capacity_gbps: float = 100.0, stream: bool = False,
+                 ring_depth: int = 4, max_inflight: int | None = None):
         """``name`` and ``device`` give each instance an explicit shard
         identity: pass a ``jax.Device`` (or an index into
-        ``jax.devices()``) to pin every dispatch to that device instead of
-        inheriting the process-global default — a fleet of ComputeBackends
-        then maps one shard per accelerator.  ``capacity_gbps`` is the
-        nominal wire capacity a placer provisions against."""
+        ``jax.devices()``), or a *list* of devices, to pin dispatches there
+        instead of inheriting the process-global default — a single device
+        maps one shard per accelerator; a list round-robins this shard's
+        dispatch groups across its devices.  ``capacity_gbps`` is the
+        nominal wire capacity a placer provisions against.
+
+        ``stream=True`` makes ``run()`` default to the pipelined streaming
+        engine; ``ring_depth`` sizes the dispatch ring's staging pool and
+        ``max_inflight`` (default: ``ring_depth``) bounds how many launched
+        dispatch groups may be awaiting their per-slot drain at once."""
         if name is not None:
             self.name = name
-        if device is not None and not hasattr(device, "platform"):
-            device = jax.devices()[int(device)]
-        self.device = device
+        if device is None:
+            self.devices = None
+        else:
+            devs = list(device) if isinstance(device, (list, tuple)) \
+                else [device]
+            self.devices = [d if hasattr(d, "platform")
+                            else jax.devices()[int(d)] for d in devs]
+        self.device = self.devices[0] if self.devices else None
+        self._rr = 0                       # round-robin device cursor
         self.capacity_gbps = capacity_gbps
+        self.stream = stream
+        self.ring_depth = max(1, int(ring_depth))
+        self.max_inflight = self.ring_depth if max_inflight is None \
+            else max(1, int(max_inflight))
+        self.ring = DispatchRing(depth=self.ring_depth)
+        self._inflight: deque[_InFlight] = deque()
+        #: batches dispatched into the ring but not yet drained (an I-BATCH
+        #: conservation term: injected == completed + queued + shed +
+        #: in_flight); nonzero only while the streaming engine is feeding
+        self.inflight_batches = 0
+        self._t_first: float | None = None   # streaming window: first launch
+        self._t_last = 0.0                   # ... -> last drain
         self.nts = dict(BUILTIN_COMPUTE_NTS)
         self.nts.update(nts or {})
         # default: megakernels only where they compile (TPU).  Off-TPU the
@@ -367,7 +515,8 @@ class ComputeBackend:
         self._lat_s: dict[str, list[float]] = {}
         self._elapsed_s = 0.0
         self.stats = {"traces": 0, "dispatches": 0, "fused_dispatches": 0,
-                      "batches": 0, "coalesced_batches": 0, "runs": 0}
+                      "batches": 0, "coalesced_batches": 0, "runs": 0,
+                      "stream_batches": 0, "stream_epochs": 0}
         #: batches fully dispatched + synced (I-BATCH conservation: this +
         #: sched.pending() + shed_batches == stats["batches"]); kept out of
         #: ``stats`` so report().extra is unchanged
@@ -389,8 +538,9 @@ class ComputeBackend:
         if self.faults is not None:
             self.faults.check_probe()
         scale = self.faults.degrade if self.faults is not None else 1.0
-        dev = self.device if self.device is not None else jax.devices()[0]
-        return {"gbps": scale * self.capacity_gbps, "device": str(dev)}
+        devs = self.devices if self.devices is not None else jax.devices()[:1]
+        return {"gbps": scale * self.capacity_gbps, "device": str(devs[0]),
+                "devices": [str(d) for d in devs]}
 
     # ----------------------------------------------------------- protocol --
     def register(self, spec: NTSpec) -> None:
@@ -617,17 +767,26 @@ class ComputeBackend:
                 dep.results.clear()
 
     # ---------------------------------------------------------------- run --
-    def run(self, **_kw) -> None:
-        """Drain the tenant queues in WDRR order, dispatch every batch
-        asynchronously (coalescing *consecutive* same-DAG same-signature
-        entries of the fair order), then synchronize with the device ONCE."""
-        if self.faults is not None and not self.faults.serving():
-            return          # crashed/hung: queues keep their pending work
-        t0 = time.perf_counter()
-        # fair service order: the whole pending set, interleaved by weight
+    def _next_device(self):
+        """Round-robin device pin for the next dispatch group (None when the
+        backend inherits the process default device)."""
+        if self.devices is None:
+            return None
+        dev = self.devices[self._rr % len(self.devices)]
+        self._rr += 1
+        return dev
+
+    def _fair_groups(self, entries: Iterable,
+                     ) -> tuple[list, dict[int, tuple[str, float]]]:
+        """Turn a fair service order into dispatch groups, coalescing
+        *consecutive* same-DAG same-signature entries.  Stream-mode NT
+        fields (the ChaCha ``ctr``) are assigned HERE — when the item
+        enters the dispatch pipeline, in deterministic fair order — so
+        multi-device round-robin and out-of-order drains can never change
+        a packet's keystream counter."""
         groups: list[tuple[tuple, list]] = []
         enq_at: dict[int, tuple[str, float]] = {}
-        for tenant, item in self.sched.drain():
+        for tenant, item in entries:
             order, dag_uid, batch = item.payload
             sf = self._stream_fields(self.deployments[dag_uid], batch)
             if sf:
@@ -638,6 +797,43 @@ class ComputeBackend:
             if not groups or groups[-1][0] != key:
                 groups.append((key, []))
             groups[-1][1].append((order, batch))
+        return groups, enq_at
+
+    def _launch(self, dep: _Deployment, batches: list[dict], bucket: int,
+                state: dict) -> dict:
+        """Common tail of both dispatch paths: device pin + program call."""
+        dev = self._next_device()
+        if dev is not None:
+            # explicit shard device: commit the whole input tree so the
+            # jitted program executes there (device_put copies — donation
+            # stays safe, and the transfer is async: it overlaps whatever
+            # kernel is already running)
+            state = jax.device_put(state, dev)
+        path = ("fused" if dep.fused is not None
+                and "allow" not in batches[0] else "composed")
+        out = self._get_program(dep, bucket, path)(state, dep.params)
+        self.stats["dispatches"] += 1
+        if path == "fused":
+            self.stats["fused_dispatches"] += 1
+        return out
+
+    def run(self, stream: bool | None = None, **_kw) -> None:
+        """Service the tenant queues.  Batch mode (the default): drain in
+        WDRR order, dispatch every batch asynchronously, synchronize with
+        the device ONCE.  Stream mode (``stream=True``, or a backend built
+        with ``stream=True``): the same fair order flows through the
+        pipelined dispatch ring with a bounded in-flight window instead of
+        a single end-of-run sync."""
+        if stream is None:
+            stream = self.stream
+        if self.faults is not None and not self.faults.serving():
+            return          # crashed/hung: queues keep their pending work
+        if stream:
+            self._run_stream()
+            return
+        t0 = time.perf_counter()
+        # fair service order: the whole pending set, interleaved by weight
+        groups, enq_at = self._fair_groups(self.sched.drain())
 
         launched = []
         for (dag_uid, _sig), entries in groups:
@@ -659,19 +855,8 @@ class ComputeBackend:
                     state[k] = v
             state["valid"] = (
                 jnp.arange(bucket, dtype=jnp.int32) < n)
-            if self.device is not None:
-                # explicit shard device: commit inputs so the jitted program
-                # executes there (device_put copies, so donation stays safe)
-                state = {k: (jax.device_put(v, self.device)
-                             if hasattr(v, "shape") else v)
-                         for k, v in state.items()}
-            path = ("fused" if dep.fused is not None
-                    and "allow" not in batches[0] else "composed")
-            out = self._get_program(dep, bucket, path)(state, dep.params)
+            out = self._launch(dep, batches, bucket, state)
             launched.append((dep, orders, sizes, out))
-            self.stats["dispatches"] += 1
-            if path == "fused":
-                self.stats["fused_dispatches"] += 1
 
         jax.block_until_ready([o for *_, o in launched])    # the ONE sync
         t_done = time.perf_counter()
@@ -684,15 +869,7 @@ class ComputeBackend:
         for dep, orders, sizes, out in launched:
             off = 0
             for order, s in zip(orders, sizes):
-                res = {}
-                for k, v in out.items():
-                    if k == "valid":
-                        continue
-                    if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1:
-                        res[k] = v[off:off + s]
-                    else:
-                        res[k] = v
-                split.append((order, dep, res))
+                split.append((order, dep, _slice_result(out, off, s)))
                 off += s
         for _, dep, res in sorted(split, key=lambda t: t[0]):
             dep.results.append(res)       # results stay in inject order
@@ -700,12 +877,150 @@ class ComputeBackend:
         if _sanitize.enabled():           # end-of-drain conservation audit
             _sanitize.check_compute(self, self.name)
 
+    # ---------------------------------------------------- streaming engine --
+    def _stage_group(self, dep: _Deployment, orders: list[int],
+                     batches: list[dict],
+                     enq: list[tuple[str, float]]) -> _InFlight:
+        """Fill one ring slot with a dispatch group and launch it: the
+        staging write is host-side (reused numpy buffers — zero steady-state
+        allocations), the ``device_put`` of the filled slot is the async
+        host->device transfer that overlaps the previous group's kernel,
+        and the jitted program donates the transferred buffers."""
+        sizes = [_rows(b) for b in batches]
+        n = sum(sizes)
+        bucket = bucket_size(n)
+        if len(batches) > 1:
+            self.stats["coalesced_batches"] += len(batches)
+        template = batches[0]
+        fields = [(k, tuple(v.shape[1:]), np.dtype(str(v.dtype)))
+                  for k, v in template.items()
+                  if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1]
+        ring_slot = self.ring.acquire(bucket, fields)
+        off = 0
+        for b, m in zip(batches, sizes):
+            for k, _trail, _dt in fields:
+                # host->host staging copy: inject batches are host-resident
+                # packet data, so filling the ring slot never syncs a device
+                ring_slot.staging[k][off:off + m] = np.asarray(b[k])  # noqa: L-HOSTSYNC
+            off += m
+        for k, _trail, _dt in fields:
+            ring_slot.staging[k][n:] = 0          # pad rows (exact fill: noop)
+        valid = ring_slot.staging["valid"]
+        valid[:n] = True
+        valid[n:] = False
+        state = dict(ring_slot.staging)
+        for k, v in template.items():             # 0-d / non-array fields
+            if k in state:
+                continue
+            state[k] = _pad_to(v, bucket) if hasattr(v, "shape") else v
+        if self._t_first is None:
+            self._t_first = time.perf_counter()   # streaming window opens
+        state = jax.device_put(state)             # async H2D of the slot
+        out = self._launch(dep, batches, bucket, state)
+        self.inflight_batches += len(orders)
+        self.stats["stream_batches"] += len(orders)
+        return _InFlight(dep, orders, sizes, out, ring_slot, enq)
+
+    def _retire(self, slot_entry: _InFlight) -> None:
+        """Drain one ring entry: the ONLY per-slot sync, taken when the
+        bounded in-flight window wraps (or at the final flush)."""
+        jax.block_until_ready(slot_entry.out)
+        t_done = time.perf_counter()
+        self._t_last = t_done
+        off = 0
+        for order, s in zip(slot_entry.orders, slot_entry.sizes):
+            # per-tenant FIFO + per-dep single tenant => retire order is
+            # inject order for every deployment
+            slot_entry.dep.results.append(
+                _slice_result(slot_entry.out, off, s))
+            off += s
+        for tenant, t_enq in slot_entry.enq:      # inject -> slot drain
+            self._lat_s.setdefault(tenant, []).append(t_done - t_enq)
+        if slot_entry.slot is not None:
+            self.ring.release(slot_entry.slot)
+        self.completed_batches += len(slot_entry.orders)
+        self.inflight_batches -= len(slot_entry.orders)
+
+    def _stream_feed(self, entries: Iterable) -> int:
+        """Push one fair service window through the dispatch ring: launch
+        each group, retiring the oldest in-flight entry whenever the
+        window exceeds ``max_inflight`` — launches and drains interleave,
+        so transfer and compute overlap across groups."""
+        groups, enq_at = self._fair_groups(entries)
+        for (dag_uid, _sig), group in groups:
+            dep = self.deployments[dag_uid]
+            orders = [order for order, _ in group]
+            batches = [batch for _, batch in group]
+            slot_entry = self._stage_group(
+                dep, orders, batches, [enq_at[o] for o in orders])
+            self._inflight.append(slot_entry)
+            while len(self._inflight) > self.max_inflight:  # ring wrap
+                self._retire(self._inflight.popleft())
+        return len(enq_at)
+
+    def _stream_flush(self) -> None:
+        """Drain every in-flight ring entry and close the streaming
+        throughput window (first-dispatch -> last-drain)."""
+        while self._inflight:
+            self._retire(self._inflight.popleft())
+        if self._t_first is not None:
+            self._elapsed_s += self._t_last - self._t_first
+            self._t_first = None
+
+    def _run_stream(self) -> None:
+        """One streaming run: the current backlog, pipelined."""
+        self._stream_feed(self.sched.drain())
+        self._stream_flush()
+        self.stats["runs"] += 1
+        if _sanitize.enabled():
+            _sanitize.check_compute(self, self.name)
+
+    def inject_stream(self, source: Iterable | Iterator, *,
+                      epoch_cost: float | None = None,
+                      epoch_batches: int | None = None) -> int:
+        """Continuous-inject streaming: service a live inject ``source``
+        epoch-by-epoch instead of draining a static backlog.
+
+        ``source`` yields ``(tenant, dag_uid, state_dict)`` triples.  Each
+        epoch ingests up to ``epoch_batches`` (default: the ring depth)
+        fresh injects, asks the scheduler for one stream-credit window
+        (:meth:`FairScheduler.stream_window` — WDRR order, at most
+        ``epoch_cost`` wire bytes; ``None`` = the whole backlog), and feeds
+        the granted work through the dispatch ring.  In-flight entries
+        carry across epochs; the final flush drains them and closes the
+        throughput window.  Returns the number of batches serviced."""
+        per_epoch = self.ring_depth if epoch_batches is None \
+            else max(1, int(epoch_batches))
+        it = iter(source)
+        exhausted = False
+        served = 0
+        while not exhausted or self.sched.pending():
+            if self.faults is not None and not self.faults.gate_stream():
+                break       # mid-stream fault: backlog stays queued/journaled
+            for _ in range(per_epoch):
+                try:
+                    tenant, dag_uid, st = next(it)
+                except StopIteration:
+                    exhausted = True
+                    break
+                self.inject(tenant, dag_uid, state=st)
+            served += self._stream_feed(self.sched.stream_window(epoch_cost))
+            self.stats["stream_epochs"] += 1
+        self._stream_flush()
+        self.stats["runs"] += 1
+        if _sanitize.enabled():
+            _sanitize.check_compute(self, self.name)
+        return served
+
     # ------------------------------------------------------------- report --
     def report(self) -> PlatformReport:
         rep = PlatformReport(backend=self.name,
                              duration_ns=self._elapsed_s * 1e9)
         rep.extra["compiles"] = self.stats["traces"]
         rep.extra.update(self.stats)
+        rep.extra["ring"] = self.ring.stats()
+        rep.extra["ring"]["max_inflight"] = self.max_inflight
+        rep.extra["inflight_batches"] = self.inflight_batches
         sched_mon = self.sched.snapshot()
         for dep in self.deployments.values():
             tenant = dep.dag.tenant
@@ -740,5 +1055,5 @@ class ComputeBackend:
 
 
 __all__ = ["BUILTIN_COMPUTE_NTS", "ComputeBackend", "ComputeNT",
-           "FUSED_KERNELS", "VPC_SPECS", "WIRE_FIELDS", "bucket_size",
-           "GBPS"]
+           "DispatchRing", "FUSED_KERNELS", "VPC_SPECS", "WIRE_FIELDS",
+           "bucket_size", "GBPS"]

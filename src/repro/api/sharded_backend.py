@@ -769,8 +769,12 @@ class ShardedBackend:
             for i in batch:
                 self.shards[i].run(**kw)
                 faults = getattr(self.shards[i], "faults", None)
-                if faults is None or faults.serving():
-                    # the batch drained: its journaled injects are done
+                if (faults is None or faults.serving()) and not getattr(
+                        self.shards[i], "inflight_batches", 0):
+                    # the batch drained AND the streaming ring is empty:
+                    # its journaled injects are done.  Entries still in a
+                    # ring slot (dispatched, not yet synced) stay journaled
+                    # so a crash before their drain replays them.
                     self._journal[i].clear()
             self._checkpoint_epoch()
             self._global_epoch(None, shards=set(batch))

@@ -218,6 +218,34 @@ class FairScheduler:
                 break
         return out
 
+    def stream_window(self, epoch_cost: float | None = None, *,
+                      limit: int | None = None,
+                      ) -> list[tuple[str, QueueItem]]:
+        """One streaming-epoch service window: pop queued items in WDRR
+        order until ``epoch_cost`` total cost (or ``limit`` items) has been
+        granted, leaving the remainder queued for the next epoch.
+
+        This is the stream-credit hook a pipelined datapath services
+        epoch-by-epoch instead of draining its whole backlog — the
+        scheduler's grants shape what enters the stream's in-flight window
+        (resource decisions pushed down into the datapath layer, not bounced
+        through a host control loop).  ``None`` = no cost cap (a full fair
+        drain).  Always admits at least one item when work is queued, so a
+        single over-budget batch cannot stall the stream."""
+        out: list[tuple[str, QueueItem]] = []
+        granted = 0.0
+
+        def stop() -> bool:
+            if limit is not None and len(out) >= limit:
+                return True
+            return (epoch_cost is not None and bool(out)
+                    and granted >= epoch_cost - COST_EPS)
+
+        for tenant, item in self.drain(stop=stop):
+            out.append((tenant, item))
+            granted += item.cost
+        return out
+
     # ====================================================== space sharing ==
     def observe(self, tenant: str, resource: str, amount: float) -> None:
         self.space.observe(tenant, resource, amount)

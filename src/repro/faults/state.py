@@ -28,6 +28,7 @@ class FaultState:
         self.drops = 0
         self.corrupted = 0
         self.nt_errors = 0
+        self.stream_interrupts = 0
 
     # ------------------------------------------------------------- queries --
     def serving(self) -> bool:
@@ -43,6 +44,17 @@ class FaultState:
 
     def scale_capacity(self, value: float) -> float:
         return value * self.degrade
+
+    def gate_stream(self) -> bool:
+        """Streaming-epoch gate: False (and counted) when the shard cannot
+        make forward progress.  A streaming loop parks instead of raising —
+        queued work stays on the fair queues and, on a fleet, in the
+        coordinator's inject journal, so a failover replays exactly the
+        batches that never reached a ring slot."""
+        if not self.serving():
+            self.stream_interrupts += 1
+            return False
+        return True
 
     def gate_inject(self, tenant: str, nts: Iterable[str] = ()) -> str:
         """Called at the top of every backend ``inject``.
@@ -75,4 +87,5 @@ class FaultState:
             "crashed": self.crashed, "hung": self.hung,
             "degrade": self.degrade, "drops": self.drops,
             "corrupted": self.corrupted, "nt_errors": self.nt_errors,
+            "stream_interrupts": self.stream_interrupts,
         }

@@ -46,14 +46,19 @@ def vpc_datapath(headers, payload, rules, key, nonce,
     ``ctr``: optional (N,) u32 per-packet keystream counters (defaults to
     ``counter0 + arange(N)``, the ``vpc_chain`` convention).  ``nat_ip`` and
     ``counter0`` may be traced values — nothing here is a compile-time
-    static except the tile size."""
+    static except the tile size.  A traced 0-d ``counter0`` is the
+    streaming dispatch ring's per-slot counter base: the ring ships one u32
+    per slot and the counter run is synthesized here, on device, inside the
+    jitted program (pad rows take counters past the batch; their output is
+    sliced off with the other pad rows)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     N = headers.shape[0]
     if N == 0:                  # empty batch: nothing to launch
         return (jnp.zeros((0,), bool), headers, payload)
     if ctr is None:
-        ctr = jnp.uint32(counter0) + jnp.arange(N, dtype=jnp.uint32)
+        ctr = jnp.asarray(counter0, jnp.uint32) \
+            + jnp.arange(N, dtype=jnp.uint32)
     prefixes, masks, rallow = rules
     bn = min(block_n, N)
     pad = (-N) % bn

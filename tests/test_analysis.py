@@ -219,6 +219,12 @@ LINT_FIXTURES = {
         def now():
             return time.time()
     """,
+    "L-RING": """
+        import jax
+        def feed(items, device):
+            for b in items:
+                launch(jax.device_put(b, device))
+    """,
     "L-SYNTAX": """
         def broken(:
     """,
@@ -228,6 +234,7 @@ LINT_PATHS = {
     "L-JITCACHE": "src/repro/api/x.py",
     "L-DONATE": "src/repro/api/some_backend.py",
     "L-NONDET": "src/repro/core/x.py",
+    "L-RING": "src/repro/api/some_backend.py",
     "L-SYNTAX": "src/repro/api/x.py",
 }
 
@@ -289,6 +296,49 @@ class TestLinter:
             lint_source(src, "src/repro/launch/notes.py"))
         assert "L-DONATE" in rules_of(
             lint_source(src, "src/repro/serving/thing.py"))
+
+    def test_ring_slot_transfer_exempt(self):
+        src = textwrap.dedent("""
+            import jax
+            def feed(items, ring):
+                for b in items:
+                    slot = ring.acquire(b)
+                    launch(jax.device_put(slot.staging, None))
+        """)
+        assert "L-RING" not in rules_of(
+            lint_source(src, "src/repro/api/some_backend.py"))
+
+    def test_ring_scoped_to_dispatch_files(self):
+        src = textwrap.dedent(LINT_FIXTURES["L-RING"])
+        assert "L-RING" not in rules_of(
+            lint_source(src, "src/repro/core/sim.py"))
+
+    def test_ring_outside_loop_silent(self):
+        src = textwrap.dedent("""
+            import jax
+            def pin(state, device):
+                return jax.device_put(state, device)
+        """)
+        assert "L-RING" not in rules_of(
+            lint_source(src, "src/repro/api/some_backend.py"))
+
+    def test_hostsync_ring_drain_exempt(self):
+        src = textwrap.dedent("""
+            import jax
+            def drain(inflight):
+                while wrapped(inflight):
+                    jax.block_until_ready(inflight[0].out)
+        """)
+        assert "L-HOSTSYNC" not in rules_of(
+            lint_source(src, "src/repro/api/some_backend.py"))
+        plain = textwrap.dedent("""
+            import jax
+            def drain(outs):
+                for o in outs:
+                    jax.block_until_ready(o)
+        """)
+        assert "L-HOSTSYNC" in rules_of(
+            lint_source(plain, "src/repro/api/some_backend.py"))
 
     def test_nondet_scoped_to_core(self):
         src = textwrap.dedent("""

@@ -187,6 +187,33 @@ class TestComputeSanitized:
         assert any(d.rule == "I-BATCH"
                    for d in inv.compute_diags(be, "compute"))
 
+    def test_inflight_ring_slots_counted(self, sanitize):
+        """Mid-stream, launched-but-undrained ring entries are a separate
+        I-BATCH term: injected == completed + queued + shed + in_flight."""
+        from repro.api import ComputeBackend
+        from repro.serving.vpc import make_packets, make_rules
+        be = ComputeBackend(use_fused=False, stream=True)
+        plat = Platform(be, specs=VPC_SPECS)
+        dep = plat.tenant("a").deploy(
+            nt("firewall") >> nt("nat"),
+            params={"firewall": {"rules": make_rules(8, seed=0)}})
+        h, p = make_packets(8, seed=1)
+        for _ in range(2):
+            dep.inject(headers=h, payload=p)
+        be._stream_feed(be.sched.drain())           # launch, don't drain
+        assert be.inflight_batches == 2
+        assert be.completed_batches == 0
+        assert inv.compute_diags(be, "compute") == []
+        be.inflight_batches = -1                    # corrupt the counter
+        diags = inv.compute_diags(be, "compute")
+        assert any(d.rule == "I-BATCH" and "negative" in d.message
+                   for d in diags)
+        be.inflight_batches = 2
+        be._stream_flush()                          # drain the ring
+        assert be.inflight_batches == 0
+        assert be.completed_batches == 2
+        assert inv.compute_diags(be, "compute") == []
+
 
 # ======================================================= end-to-end: engine ====
 class TestEngineSanitized:

@@ -1,0 +1,296 @@
+"""Streaming datapath: the pipelined dispatch-ring engine (ISSUE-9).
+
+Covers the acceptance surface: ChaCha ciphertext bit-exact across batch vs
+stream vs multi-device round-robin for bucket-straddling sizes (incl. N=1),
+scalar per-slot counters vs the array path, zero steady-state ring
+allocations, the first-dispatch -> last-drain streaming throughput window
+(and the unchanged two-read batch window), ``inject_stream`` epoch
+servicing, ring-wrap exact-fill (backlog == ring_depth x bucket), and
+mid-stream shard crash + journal replay staying bit-exact on the fleet.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.api import ComputeBackend, Platform, ShardedBackend, VPC_SPECS
+from repro.api.compute_backend import bucket_size
+from repro.api.dag import nt
+from repro.faults import FaultPlan, FaultState
+from repro.serving.vpc import make_packets, make_rules
+
+RULES = make_rules(32, seed=2)
+KEY = jnp.arange(8, dtype=jnp.uint32) * 3 + 1
+NONCE = jnp.arange(3, dtype=jnp.uint32) + 7
+VPC_PARAMS = {"firewall": {"rules": RULES}, "nat": {"nat_ip": 0x0A000001},
+              "chacha20": {"key": KEY, "nonce": NONCE}}
+FW_PARAMS = {"firewall": {"rules": RULES}}
+
+VPC = nt("firewall") >> nt("nat") >> nt("chacha20")
+FW_NAT = nt("firewall") >> nt("nat")
+
+
+def mk_platform(chain=VPC, params=VPC_PARAMS, **backend_kw):
+    backend_kw.setdefault("use_fused", False)
+    be = ComputeBackend(**backend_kw)
+    plat = Platform(be, specs=VPC_SPECS)
+    dep = plat.tenant("t").deploy(chain, params=params)
+    return plat, dep
+
+
+def outputs_of(plat):
+    return plat.report()["t"].outputs
+
+
+def assert_outputs_equal(ref, got, fields=("allow", "headers", "payload")):
+    assert len(ref) == len(got)
+    for i, (r, g) in enumerate(zip(ref, got)):
+        for k in fields:
+            np.testing.assert_array_equal(
+                np.asarray(r[k]), np.asarray(g[k]),
+                err_msg=f"output {i} field {k!r}")
+
+
+# ====================================================== bit-exactness ====
+class TestStreamBitExact:
+    # bucket-straddling: N=1 edge, mid-bucket, exact fit, first straddle
+    SIZES = (1, 7, 8, 9)
+
+    def _batches(self):
+        return [make_packets(n, seed=i) for i, n in enumerate(self.SIZES)]
+
+    def test_stream_and_round_robin_match_batch(self):
+        """Same injects through (a) the batch-synchronous drain, (b) the
+        streaming ring, (c) streaming with 2-way device round-robin: the
+        ChaCha ciphertext (and every other field) must be identical."""
+        batches = self._batches()
+        plat_b, dep_b = mk_platform()
+        for h, p in batches:
+            dep_b.inject(headers=h, payload=p)
+        plat_b.run()
+        ref = outputs_of(plat_b)
+
+        plat_s, dep_s = mk_platform(stream=True, ring_depth=3, max_inflight=2)
+        for h, p in batches:
+            dep_s.inject(headers=h, payload=p)
+        plat_s.run()
+        assert_outputs_equal(ref, outputs_of(plat_s))
+        assert plat_s.backend.stats["stream_batches"] == len(batches)
+        assert plat_s.backend.inflight_batches == 0
+
+        d0 = jax.devices()[0]       # same device twice: exercises RR path
+        plat_r, dep_r = mk_platform(stream=True, device=[d0, d0])
+        for h, p in batches:
+            dep_r.inject(headers=h, payload=p)
+        plat_r.run()
+        assert_outputs_equal(ref, outputs_of(plat_r))
+        assert plat_r.backend._rr >= 1
+
+    def test_scalar_slot_ctr_matches_array_ctr(self):
+        """The ring's per-slot scalar counter base (``scalar_ctr``: one u32
+        per slot, expanded on device) produces the same ciphertext as the
+        per-packet counter array, across a continuing stream."""
+        sizes = (1, 7, 8, 5)        # one bucket: exactly one compile each
+        scalar = {**VPC_PARAMS,
+                  "chacha20": {**VPC_PARAMS["chacha20"], "stream": True,
+                               "scalar_ctr": True}}
+        array = {**VPC_PARAMS,
+                 "chacha20": {**VPC_PARAMS["chacha20"], "stream": True}}
+        plat_s, dep_s = mk_platform(params=scalar, stream=True,
+                                    ring_depth=2, max_inflight=1)
+        plat_a, dep_a = mk_platform(params=array)
+        for i, n in enumerate(sizes):
+            h, p = make_packets(n, seed=10 + i)
+            dep_s.inject(headers=h, payload=p)
+            dep_a.inject(headers=h, payload=p)
+        plat_s.run()
+        plat_a.run()
+        assert_outputs_equal(outputs_of(plat_a), outputs_of(plat_s))
+        # the stream state advanced by the full packet count on both
+        st = plat_s.backend.export_state(dep_s.uid)
+        assert st["chacha20"]["next_ctr"] == 1 + sum(sizes)
+
+
+# ========================================================== the ring ====
+class TestDispatchRing:
+    def test_zero_steady_state_allocations(self):
+        """After the pipeline warms up, every ring acquire is a reuse: slot
+        materializations are bounded by the in-flight window, not by the
+        number of batches."""
+        plat, dep = mk_platform(chain=FW_NAT, params=FW_PARAMS, stream=True,
+                                ring_depth=2, max_inflight=1)
+        be = plat.backend
+        h, p = make_packets(8, seed=0)
+        n_batches = 12
+        src = (("t", dep.uid, {"headers": h, "payload": p})
+               for _ in range(n_batches))
+        served = be.inject_stream(src, epoch_batches=1)
+        assert served == n_batches
+        ring = be.ring.stats()
+        assert ring["allocs"] <= be.max_inflight + 1
+        assert ring["reuses"] >= n_batches - ring["allocs"]
+        assert be.completed_batches == n_batches
+
+    def test_ring_wrap_exact_fill(self):
+        """Regression (ISSUE-9 satellite): a backlog of exactly ring_depth
+        x bucket rows, injected as exact-bucket batches, must stay in its
+        bucket at the ring wrap — no spill into the next bucket, no
+        retrace, nothing lost."""
+        depth = 2
+        bucket = 8                          # _MIN_BUCKET: exact-fit batches
+        plat, dep = mk_platform(chain=FW_NAT, params=FW_PARAMS, stream=True,
+                                ring_depth=depth, max_inflight=depth)
+        be = plat.backend
+        batches = [make_packets(bucket, seed=20 + i) for i in range(depth)]
+        src = (("t", dep.uid, {"headers": h, "payload": p})
+               for h, p in batches)
+        served = be.inject_stream(src, epoch_batches=1)
+        assert served == depth
+        outs = outputs_of(plat)
+        assert [o["headers"].shape[0] for o in outs] == [bucket] * depth
+        # exact fit stayed in its bucket: one shape ever reached jit
+        assert be.stats["traces"] == 1
+        assert be.inflight_batches == 0 and be.completed_batches == depth
+
+    def test_bucket_size_exact_fits_and_edges(self):
+        assert bucket_size(0) == 8
+        assert bucket_size(1) == 8
+        assert bucket_size(8) == 8          # exact fit: no spill
+        assert bucket_size(9) == 16
+        assert bucket_size(16) == 16
+        assert bucket_size(17) == 32
+        with pytest.raises(ValueError):
+            bucket_size(-1)
+
+
+# ==================================================== throughput window ====
+class TestThroughputWindow:
+    def _fake_clock(self, monkeypatch):
+        import repro.api.compute_backend as cb
+        calls = {"n": 0}
+
+        def fake():
+            calls["n"] += 1
+            return float(calls["n"])
+
+        monkeypatch.setattr(cb.time, "perf_counter", fake)
+        return calls
+
+    def test_batch_window_is_two_reads(self, monkeypatch):
+        """Regression pin: batch-mode run() reads the clock exactly twice
+        (start, post-sync), so its report() numbers are unchanged by the
+        streaming engine."""
+        calls = self._fake_clock(monkeypatch)
+        plat, dep = mk_platform(chain=FW_NAT, params=FW_PARAMS)
+        h, p = make_packets(8, seed=0)
+        for _ in range(3):
+            dep.inject(headers=h, payload=p)     # 1 clock read per submit
+        before = calls["n"]
+        plat.run()
+        be = plat.backend
+        assert be._elapsed_s == 1.0              # t_done - t0: one step
+        assert calls["n"] == before + 2          # exactly t0 and t_done
+        assert plat.report().duration_ns == pytest.approx(1.0e9)
+
+    def test_stream_window_first_dispatch_to_last_drain(self, monkeypatch):
+        """The streaming window opens at the first ring launch and closes
+        at the last drain — one clock read per stage (guarded to the
+        first) and one per retire."""
+        calls = self._fake_clock(monkeypatch)
+        be = ComputeBackend(use_fused=False, stream=True)
+        plat = Platform(be, specs=VPC_SPECS)
+        ten = plat.tenant("t")
+        dep1 = ten.deploy(FW_NAT, params=FW_PARAMS)
+        dep2 = ten.deploy(nt("nat") >> nt("firewall"), params=FW_PARAMS)
+        h, p = make_packets(8, seed=0)
+        # alternating deployments: 3 non-coalescable dispatch groups
+        dep1.inject(headers=h, payload=p)
+        dep2.inject(headers=h, payload=p)
+        dep1.inject(headers=h, payload=p)
+        plat.run()
+        # t_first = first stage read; 3 retires follow => window = 3 steps
+        assert be._elapsed_s == 3.0
+        assert plat.report().duration_ns == pytest.approx(3.0e9)
+        del calls
+
+
+# ======================================================= inject_stream ====
+class TestInjectStream:
+    def test_epoch_serviced_generator(self, monkeypatch):
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        plat, dep = mk_platform(chain=FW_NAT, params=FW_PARAMS, stream=True,
+                                ring_depth=4)
+        be = plat.backend
+        h, p = make_packets(8, seed=0)
+        served = be.inject_stream(
+            (("t", dep.uid, {"headers": h, "payload": p})
+             for _ in range(5)),
+            epoch_batches=2)
+        assert served == 5
+        assert be.stats["stream_epochs"] >= 3     # ceil(5 / 2)
+        assert len(outputs_of(plat)) == 5
+        assert be.inflight_batches == 0
+
+    def test_midstream_fault_parks_backlog(self):
+        """A crashed shard interrupts the stream instead of raising: queued
+        work stays on the fair queues for replay, and the interrupt is
+        counted."""
+        plat, dep = mk_platform(chain=FW_NAT, params=FW_PARAMS, stream=True)
+        be = plat.backend
+        be.faults = FaultState(be.name)
+        h, p = make_packets(8, seed=0)
+        for _ in range(2):
+            dep.inject(headers=h, payload=p)
+        be.faults.crashed = True
+        served = be.inject_stream(iter(()))
+        assert served == 0
+        assert be.faults.stream_interrupts == 1
+        assert be.sched.pending() == 2            # parked, not lost
+        assert be.completed_batches == 0
+        be.faults.crashed = False                 # recover: drain resumes
+        plat.run()
+        assert be.completed_batches == 2
+
+
+# ============================================== fleet: crash mid-stream ====
+class TestStreamFailover:
+    def _run_fleet(self, crash, tmp_path=None):
+        """test_faults' fleet scenario with streaming shards: the stateful
+        stream-ctr ChaCha chain, crash at epoch 2, failover + journal
+        replay, output stream bit-exact with the crash-free run."""
+        plan = (FaultPlan(seed=3).crash(shard=0, epoch=2)
+                if crash else None)
+        shards = [ComputeBackend(name=f"c{i}", stream=True, ring_depth=2)
+                  for i in range(2)]
+        sb = ShardedBackend(
+            shards, auto_rebalance=False, fault_plan=plan,
+            health_threshold=1,
+            checkpoint=str(tmp_path / "ckpt") if tmp_path else None)
+        plat = Platform(sb, specs=VPC_SPECS)
+        ten = plat.tenant("a", weight=1.0)
+        params = {"firewall": {"rules": RULES},
+                  "chacha20": {"stream": True, "key": KEY, "nonce": NONCE,
+                               "counter0": 1}}
+        dep = ten.deploy(nt("firewall") >> nt("chacha20"), shard=0,
+                         params=params)
+        rng = np.random.default_rng(7)
+        for _ in range(4):
+            sb.inject("a", dep.uid, state={
+                "headers": rng.integers(0, 2 ** 31, (8, 5), dtype=np.uint32),
+                "payload": rng.integers(0, 2 ** 31, (8, 16),
+                                        dtype=np.uint32)})
+            sb.run()
+        rep = plat.report()
+        outs = [np.asarray(o["payload"]) for o in rep.tenants["a"].outputs]
+        return np.concatenate(outs), rep
+
+    def test_midstream_crash_replays_bit_exact(self, tmp_path):
+        ref, _ = self._run_fleet(crash=False)
+        got, rep = self._run_fleet(crash=True, tmp_path=tmp_path)
+        (fo,) = rep.extra["failovers"]
+        assert fo["shard"] == "c0" and fo["lost"] == []
+        assert rep.extra["replayed"] >= 1
+        assert rep.extra["lost"]["deployments"] == 0
+        np.testing.assert_array_equal(ref, got)
