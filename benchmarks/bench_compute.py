@@ -377,9 +377,11 @@ def bench_compute_stream(smoke: bool | None = None,
     return res
 
 
-def bench_compute_stream_summary() -> dict:
+def bench_compute_stream_summary(out_dir: Path | str | None = None) -> dict:
     """Entry for benchmarks.run: flat keys only."""
-    res = bench_compute_stream()
+    res = bench_compute_stream(
+        out_path=Path(out_dir) / DEFAULT_STREAM_OUT.name if out_dir
+        else DEFAULT_STREAM_OUT)
     errs = check_stream_section(res["stream"])
     if errs:
         raise RuntimeError("; ".join(errs))
@@ -392,9 +394,10 @@ def bench_compute_stream_summary() -> dict:
     return flat
 
 
-def bench_compute_summary() -> dict:
+def bench_compute_summary(out_dir: Path | str | None = None) -> dict:
     """Entry for benchmarks.run: flat keys only."""
-    res = bench_compute()
+    res = bench_compute(out_path=Path(out_dir) / DEFAULT_OUT.name
+                        if out_dir else DEFAULT_OUT)
     errs = check_schema(res)
     if errs:
         raise RuntimeError("; ".join(errs))

@@ -267,9 +267,10 @@ def check_schema(res: dict) -> list[str]:
     return errs
 
 
-def bench_fairness_summary() -> dict:
+def bench_fairness_summary(out_dir: Path | str | None = None) -> dict:
     """Entry for benchmarks.run: flat keys only."""
-    res = bench_fairness()
+    res = bench_fairness(out_path=Path(out_dir) / DEFAULT_OUT.name
+                         if out_dir else DEFAULT_OUT)
     errs = check_schema(res)
     if errs:
         raise RuntimeError("; ".join(errs))

@@ -296,9 +296,10 @@ def check_schema(res: dict) -> list[str]:
     return errs
 
 
-def bench_resilience_summary() -> dict:
+def bench_resilience_summary(out_dir: Path | str | None = None) -> dict:
     """Entry for benchmarks.run: flat keys only."""
-    res = bench_resilience()
+    res = bench_resilience(out_path=Path(out_dir) / DEFAULT_OUT.name
+                           if out_dir else DEFAULT_OUT)
     errs = check_schema(res)
     if errs:
         raise RuntimeError("; ".join(errs))

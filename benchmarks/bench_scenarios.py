@@ -1,0 +1,406 @@
+"""Scenario suite: three datacenter workloads replayed from sealed traces.
+
+Each scenario is ONE fingerprinted :class:`repro.workloads.Trace` played
+through :class:`repro.workloads.TraceDriver` — the bench never touches a
+backend's internals, so what it measures is the platform surface a
+tenant actually gets:
+
+- **diurnal** — a 64-tenant Zipf fleet with a day/night cycle on a
+  2-shard sim fleet (the paper's §2 consolidation argument: per-tenant
+  peaks dwarf the aggregate's);
+- **flash_crowd** — a burst landing on one tenant of a streaming
+  compute backend, and the same trace on batch compute (stream must
+  serve everything batch does);
+- **churn_failover** — tenants joining/leaving while a shard crashes
+  mid-trace, on a 3-shard fleet with the fault plane armed.
+
+A fourth *portability* block drives one small churny trace across every
+substrate kind — sim, compute batch, compute stream, sharded, serve
+(chains remapped onto prefill»decode with the schedule untouched) — and
+asserts identical arrival schedules, census, and inject counters.
+
+Every scenario replays twice; the determinism fingerprint hashes the
+schedule + census + counters and must match across runs.  Wall-clock
+numbers live under ``timing`` keys, which the CI perf gate skips —
+everything it *does* gate is deterministic.
+
+  PYTHONPATH=src python benchmarks/bench_scenarios.py --smoke
+  PYTHONPATH=src python benchmarks/bench_scenarios.py --full --out /tmp/s.json
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import sys
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT / "src") not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT / "src"))
+
+DEFAULT_OUT = REPO_ROOT / "BENCH_scenarios.json"
+
+#: remap every VPC chain template onto the serving engine's canonical
+#: chain so the SAME fingerprinted trace replays there unchanged
+SERVE_CHAIN_MAP = {
+    ("firewall",): ("prefill", "decode"),
+    ("firewall", "nat"): ("prefill", "decode"),
+    ("nat",): ("prefill", "decode"),
+    ("firewall", "nat", "chacha20"): ("prefill", "decode"),
+}
+
+DELIVERED_BOUND = 0.95
+
+
+# ============================================================ harness ======
+
+def _fingerprint(res) -> str:
+    """Hash of everything a replay must reproduce bit-for-bit."""
+    blob = json.dumps(
+        {"schedule": res.schedule_fingerprint, "census": res.census,
+         "counters": res.counters()},
+        sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _drive_twice(trace, make_platform, **driver_kw):
+    """Replay on two fresh platforms; returns (result, fp1, fp2, secs).
+    Under ``REPRO_SANITIZE=1`` the I-TRACE invariant cross-checks the
+    replays and raises on any counter/census divergence."""
+    from repro.analysis import invariants
+    from repro.workloads import TraceDriver
+    t0 = time.perf_counter()
+    r1 = TraceDriver(make_platform(), **driver_kw).drive(trace)
+    r2 = TraceDriver(make_platform(), **driver_kw).drive(trace)
+    secs = time.perf_counter() - t0
+    if invariants.enabled():
+        invariants.check_trace(r1, r2, f"scenario/{trace.name}")
+    return r1, _fingerprint(r1), _fingerprint(r2), secs
+
+
+def _delivered(res) -> float:
+    offered = sum(res.injected.values())
+    return round(sum(res.served.values()) / max(offered, 1), 4)
+
+
+# =========================================================== scenarios =====
+
+def _scenario_diurnal(smoke: bool) -> dict:
+    from repro.api import Platform, SimBackend
+    from repro.api.compute_backend import VPC_SPECS
+    from repro.workloads import diurnal, generate
+
+    epochs = 10 if smoke else 32
+    trace = generate(
+        "diurnal64", seed=11, epochs=epochs, n_tenants=64,
+        arrival=diurnal(mean=1.2, amplitude=0.8, period=epochs),
+        churn_frac=0.0)
+
+    def make_platform():
+        return Platform([SimBackend(name="s0", seed=1),
+                         SimBackend(name="s1", seed=2)], specs=VPC_SPECS)
+
+    res, fp1, fp2, secs = _drive_twice(trace, make_platform)
+    rates = [sum(n for _, n in trace.arrivals(e)) for e in range(epochs)]
+    served = sorted(res.served.get(t.name, 0) for t in trace.tenants)
+    head = sum(served[-6:])                 # top decile of 64 tenants
+    return {
+        "trace_fingerprint": trace.fingerprint(),
+        "substrate": "sim_fleet_2shard",
+        "tenants": len(trace.tenants), "epochs": epochs,
+        "offered_pkts": trace.total_pkts,
+        "served_pkts": sum(res.served.values()),
+        "delivered_ratio": _delivered(res),
+        "peak_over_mean": round(max(rates) / max(sum(rates) / len(rates),
+                                                 1e-9), 3),
+        "head_decile_share": round(head / max(sum(served), 1), 4),
+        "determinism": {"fp": fp1, "match": fp1 == fp2},
+        "timing": {"seconds": round(secs, 2)},
+    }
+
+
+def _scenario_flash_crowd(smoke: bool) -> dict:
+    from repro.api import ComputeBackend, Platform
+    from repro.api.compute_backend import VPC_SPECS
+    from repro.workloads import constant, flash_crowd, generate
+
+    epochs = 6 if smoke else 24
+    burst_at, magnitude = epochs // 3, (90 if smoke else 400)
+
+    def shapes(i, _rng):
+        if i == 0:
+            return constant(4.0) + flash_crowd(
+                at=burst_at, magnitude=magnitude, width=2.0)
+        return constant(6.0)
+
+    trace = generate("flashcrowd", seed=23, epochs=epochs, n_tenants=6,
+                     arrival=shapes, churn_frac=0.0)
+
+    def make_stream():
+        return Platform(ComputeBackend(stream=True), specs=VPC_SPECS)
+
+    def make_batch():
+        return Platform(ComputeBackend(), specs=VPC_SPECS)
+
+    res, fp1, fp2, secs = _drive_twice(trace, make_stream)
+    from repro.workloads import TraceDriver
+    t0 = time.perf_counter()
+    res_b = TraceDriver(make_batch()).drive(trace)
+    batch_secs = time.perf_counter() - t0
+
+    victim = trace.tenants[0].name
+    per_epoch = [sum(n for _, n in trace.arrivals(e))
+                 for e in range(epochs)]
+    return {
+        "trace_fingerprint": trace.fingerprint(),
+        "substrate": "compute_stream",
+        "tenants": len(trace.tenants), "epochs": epochs,
+        "offered_pkts": trace.total_pkts,
+        "served_pkts": sum(res.served.values()),
+        "delivered_ratio": _delivered(res),
+        "burst_epoch": burst_at,
+        "burst_peak_pkts": max(per_epoch),
+        "crowd_tenant_served": res.served.get(victim, 0),
+        "stream_equals_batch_served": res.counters()["served"]
+        == res_b.counters()["served"],
+        "determinism": {"fp": fp1, "match": fp1 == fp2},
+        "timing": {"seconds": round(secs, 2),
+                   "batch_seconds": round(batch_secs, 2)},
+    }
+
+
+def _scenario_churn_failover(smoke: bool) -> dict:
+    from repro.api import Platform, SimBackend
+    from repro.api.compute_backend import VPC_SPECS
+    from repro.api.sharded_backend import ShardedBackend
+    from repro.faults import FaultPlan
+    from repro.workloads import constant, generate
+
+    epochs = 12 if smoke else 28
+    crash_epoch = epochs // 3
+    trace = generate("churnfail", seed=37, epochs=epochs, n_tenants=10,
+                     arrival=constant(6.0), churn_frac=0.5)
+
+    def make_platform():
+        shards = [SimBackend(name=f"s{i}", seed=i) for i in range(3)]
+        plan = FaultPlan(seed=37).crash(1, epoch=crash_epoch)
+        return Platform(ShardedBackend(shards, fault_plan=plan),
+                        specs=VPC_SPECS)
+
+    res, fp1, fp2, secs = _drive_twice(trace, make_platform)
+    extra = getattr(res.report, "extra", {}) or {}
+    failovers = extra.get("failovers", [])
+    churned = sum(1 for t in trace.tenants
+                  if t.join_epoch > 0 or t.leave_epoch is not None)
+    return {
+        "trace_fingerprint": trace.fingerprint(),
+        "substrate": "sharded_3",
+        "tenants": len(trace.tenants), "epochs": epochs,
+        "churned_tenants": churned,
+        "crash_epoch": crash_epoch,
+        "offered_pkts": trace.total_pkts,
+        "served_pkts": sum(res.served.values()),
+        "delivered_ratio": _delivered(res),
+        "failovers": len(failovers),
+        "lost_deployments": (extra.get("lost") or {}).get(
+            "deployments", 0),
+        "determinism": {"fp": fp1, "match": fp1 == fp2},
+        "timing": {"seconds": round(secs, 2)},
+    }
+
+
+def _portability(smoke: bool) -> dict:
+    """One small churny trace across every substrate kind."""
+    from repro import configs
+    from repro.api import (SERVE_SPECS, ComputeBackend, Platform,
+                           ServeBackend, SimBackend)
+    from repro.api.compute_backend import VPC_SPECS
+    from repro.serving.engine import EngineConfig
+    from repro.workloads import TraceDriver, constant, generate
+
+    epochs = 6 if smoke else 10
+    trace = generate("portability", seed=5, epochs=epochs, n_tenants=6,
+                     arrival=constant(1.0), churn_frac=0.25)
+
+    def serve_platform():
+        cfg = configs.get_tiny_config("musicgen-medium").replace(
+            frontend="tokens", vocab_size=64)
+        return Platform(ServeBackend(cfg, EngineConfig(batch_sizes=(1,),
+                                                       max_len=32)),
+                        specs=SERVE_SPECS)
+
+    drivers = {
+        "sim": lambda: TraceDriver(
+            Platform(SimBackend(seed=3), specs=VPC_SPECS)),
+        "compute": lambda: TraceDriver(
+            Platform(ComputeBackend(), specs=VPC_SPECS)),
+        "compute_stream": lambda: TraceDriver(
+            Platform(ComputeBackend(stream=True), specs=VPC_SPECS)),
+        "sharded": lambda: TraceDriver(
+            Platform([SimBackend(name="p0", seed=1),
+                      SimBackend(name="p1", seed=2)], specs=VPC_SPECS)),
+        "serve": lambda: TraceDriver(
+            serve_platform(), chain_map=SERVE_CHAIN_MAP, max_new=2),
+    }
+    t0 = time.perf_counter()
+    results = {k: mk().drive(trace) for k, mk in drivers.items()}
+    secs = time.perf_counter() - t0
+
+    ref = results["sim"]
+    return {
+        "trace_fingerprint": trace.fingerprint(),
+        "tenants": len(trace.tenants), "epochs": epochs,
+        "offered_pkts": trace.total_pkts,
+        "substrates": {
+            k: {"schedule_fingerprint": r.schedule_fingerprint,
+                "injected": sum(r.injected.values()),
+                "served": sum(r.served.values()),
+                "delivered_ratio": _delivered(r)}
+            for k, r in results.items()},
+        "identical_schedule": all(
+            r.schedule_fingerprint == ref.schedule_fingerprint
+            for r in results.values()),
+        "identical_census": all(r.census == ref.census
+                                for r in results.values()),
+        "identical_injected": all(r.injected == ref.injected
+                                  for r in results.values()),
+        "timing": {"seconds": round(secs, 2)},
+    }
+
+
+# ============================================================ bench ========
+
+def bench_scenarios(smoke: bool | None = None,
+                    out_path: Path | str = DEFAULT_OUT) -> dict:
+    import jax
+    backend = jax.default_backend()
+    if smoke is None:
+        smoke = backend != "tpu"
+
+    scenarios = {
+        "diurnal": _scenario_diurnal(smoke),
+        "flash_crowd": _scenario_flash_crowd(smoke),
+        "churn_failover": _scenario_churn_failover(smoke),
+    }
+    port = _portability(smoke)
+
+    checks = {
+        "all_deterministic": all(
+            s["determinism"]["match"] for s in scenarios.values()),
+        "all_delivered": all(
+            s["delivered_ratio"] >= DELIVERED_BOUND
+            for s in scenarios.values()),
+        "failover_landed": scenarios["churn_failover"]["failovers"] >= 1,
+        "stream_equals_batch":
+            scenarios["flash_crowd"]["stream_equals_batch_served"],
+        "portable_schedule": port["identical_schedule"],
+        "portable_census": port["identical_census"],
+        "portable_injected": port["identical_injected"],
+    }
+    res = {
+        "bench": "bench_scenarios",
+        "mode": "smoke" if smoke else "full",
+        "backend": backend,
+        "delivered_bound": DELIVERED_BOUND,
+        "scenarios": scenarios,
+        "portability": port,
+        "acceptance": {"pass": all(checks.values()), "checks": checks},
+    }
+    out_path = Path(out_path)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(res, indent=1) + "\n")
+    # every scenario run leaves a ledger entry next to its snapshot, so
+    # the perf trajectory accumulates even outside CI
+    from repro.perfbench import append_entry
+    append_entry(out_path.parent / "BENCH_trajectory.json",
+                 bench="bench_scenarios", snapshot=res)
+    return res
+
+
+def check_schema(res: dict) -> list[str]:
+    """The contract CI enforces: all three scenarios present, replayed
+    deterministically, delivered, portable across every substrate."""
+    errs = []
+    for k in ("bench", "mode", "backend", "scenarios", "portability",
+              "acceptance"):
+        if k not in res:
+            errs.append(f"missing key {k!r}")
+    for name in ("diurnal", "flash_crowd", "churn_failover"):
+        s = res.get("scenarios", {}).get(name)
+        if s is None:
+            errs.append(f"missing scenario {name!r}")
+            continue
+        if not s.get("determinism", {}).get("match"):
+            errs.append(f"{name}: double-replay diverged")
+        if s.get("delivered_ratio", 0) < res.get("delivered_bound", 0.95):
+            errs.append(f"{name}: delivered {s.get('delivered_ratio')} "
+                        f"< {res.get('delivered_bound')}")
+    subs = set(res.get("portability", {}).get("substrates", {}))
+    want = {"sim", "compute", "compute_stream", "sharded", "serve"}
+    if subs != want:
+        errs.append(f"portability covered {sorted(subs)}, want "
+                    f"{sorted(want)}")
+    for check, ok in res.get("acceptance", {}).get("checks", {}).items():
+        if not ok:
+            errs.append(f"acceptance check failed: {check}")
+    return errs
+
+
+def bench_scenarios_summary(out_dir: Path | str | None = None) -> dict:
+    """Entry for benchmarks.run: flat keys only."""
+    out = Path(out_dir) / "BENCH_scenarios.json" if out_dir \
+        else DEFAULT_OUT
+    res = bench_scenarios(out_path=out)
+    errs = check_schema(res)
+    if errs:
+        raise RuntimeError("; ".join(errs))
+    flat = {k: v for k, v in res.items() if not isinstance(v, (list, dict))}
+    for name, s in res["scenarios"].items():
+        flat[f"{name}_delivered_ratio"] = s["delivered_ratio"]
+        flat[f"{name}_served_pkts"] = s["served_pkts"]
+        flat[f"{name}_deterministic"] = s["determinism"]["match"]
+    flat["portability_substrates"] = len(
+        res["portability"]["substrates"])
+    flat["acceptance_pass"] = res["acceptance"]["pass"]
+    return flat
+
+
+def main(argv=None) -> int:
+    args = list(argv if argv is not None else sys.argv[1:])
+    smoke = None
+    out = DEFAULT_OUT
+    while args:
+        a = args.pop(0)
+        if a == "--smoke":
+            smoke = True
+        elif a == "--full":
+            smoke = False
+        elif a == "--out":
+            if not args:
+                print("--out needs a path")
+                return 2
+            out = Path(args.pop(0))
+        else:
+            print(f"unknown arg {a!r}; known: --smoke --full --out PATH")
+            return 2
+    res = bench_scenarios(smoke=smoke, out_path=out)
+    for name, s in res["scenarios"].items():
+        print(f"bench_scenarios,{name}_delivered_ratio,"
+              f"{s['delivered_ratio']}")
+        print(f"bench_scenarios,{name}_deterministic,"
+              f"{s['determinism']['match']}")
+        print(f"bench_scenarios,{name}_trace,{s['trace_fingerprint']}")
+    print(f"bench_scenarios,portability_identical_schedule,"
+          f"{res['portability']['identical_schedule']}")
+    print(f"bench_scenarios,acceptance_pass,{res['acceptance']['pass']}")
+    print(f"bench_scenarios,out,{out}")
+    errs = check_schema(res)
+    if errs:
+        print("FAIL: " + "; ".join(errs))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

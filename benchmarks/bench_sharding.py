@@ -275,9 +275,10 @@ def check_schema(res: dict) -> list[str]:
     return errs
 
 
-def bench_sharding_summary() -> dict:
+def bench_sharding_summary(out_dir: Path | str | None = None) -> dict:
     """Entry for benchmarks.run: flat keys only."""
-    res = bench_sharding()
+    res = bench_sharding(out_path=Path(out_dir) / DEFAULT_OUT.name
+                         if out_dir else DEFAULT_OUT)
     errs = check_schema(res)
     if errs:
         raise RuntimeError("; ".join(errs))

@@ -1,0 +1,22 @@
+"""Repo-root shim for the perf gate: ``python benchmarks/compare.py
+BASE CAND [...]`` == ``python -m repro.perfbench compare ...``.
+
+Exists so CI and humans can gate snapshots without remembering the
+module path; all behavior (variance gate, trajectory ledger, exit
+codes) lives in :mod:`repro.perfbench`.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+# make src/ importable when invoked as a plain script from the repo root
+_SRC = Path(__file__).resolve().parents[1] / "src"
+if str(_SRC) not in sys.path:
+    sys.path.insert(0, str(_SRC))
+
+from repro.perfbench.__main__ import main  # noqa: E402
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(["compare", *sys.argv[1:]]))

@@ -39,6 +39,12 @@ wrapped in :class:`InvariantViolation`):
   - **I-VMEM**: page frames are conserved (free + owned == total), every
     owned frame's page-table entry points back at it, and the swapped-page
     counter matches the page tables.
+  - **I-TRACE**: two replays of one fingerprinted workload trace
+    (:class:`repro.workloads.TraceDriver` results) agree on everything
+    the trace seals: trace fingerprint, realized arrival-schedule
+    fingerprint, per-epoch tenant census, and per-tenant inject/serve
+    counters.  Checked wherever a scenario bench or test replays a trace
+    twice under ``REPRO_SANITIZE=1``.
 """
 from __future__ import annotations
 
@@ -253,10 +259,53 @@ def check_engine(engine, where: str) -> None:
     _raise_if(diags)
 
 
+# ================================================================= trace ====
+def trace_diags(first, second, where: str) -> list[Diagnostic]:
+    """I-TRACE over two :class:`repro.workloads.DriveResult` replays of
+    the same trace (duck-typed: anything with the same surface works)."""
+    out: list[Diagnostic] = []
+    if first.trace_fingerprint != second.trace_fingerprint:
+        out.append(_d(
+            "I-TRACE", where,
+            f"replays drove different traces: {first.trace_fingerprint} "
+            f"vs {second.trace_fingerprint}",
+            "replay the same sealed Trace object (or its dict round-trip)"))
+        return out          # everything below is meaningless across traces
+    if first.schedule_fingerprint != second.schedule_fingerprint:
+        out.append(_d(
+            "I-TRACE", where,
+            "realized arrival schedules diverged across replays "
+            f"({first.schedule_fingerprint} vs "
+            f"{second.schedule_fingerprint})",
+            "the driver must derive every inject from the sealed trace, "
+            "never from live state"))
+    if first.census != second.census:
+        out.append(_d(
+            "I-TRACE", where,
+            "per-epoch tenant census diverged across replays",
+            "join/leave application must be a pure function of the trace"))
+    for kind in ("injected", "served"):
+        a, b = getattr(first, kind), getattr(second, kind)
+        if a != b:
+            drift = sorted(t for t in set(a) | set(b)
+                           if a.get(t) != b.get(t))
+            out.append(_d(
+                "I-TRACE", f"{where}/{kind}",
+                f"per-tenant {kind} counters diverged across replays "
+                f"(tenants {drift[:5]}{'...' if len(drift) > 5 else ''})",
+                "hunt nondeterminism in the backend window (unseeded RNG, "
+                "wall-clock coupling) — the trace itself matched"))
+    return out
+
+
+def check_trace(first, second, where: str) -> None:
+    _raise_if(trace_diags(first, second, where))
+
+
 __all__ = [
     "InvariantViolation", "enabled",
     "check_scheduler", "check_snic", "check_fleet", "check_compute",
-    "check_engine", "check_failover",
+    "check_engine", "check_failover", "check_trace",
     "scheduler_diags", "snic_diags", "fleet_packet_diags", "compute_diags",
-    "vmem_diags", "failover_diags",
+    "vmem_diags", "failover_diags", "trace_diags",
 ]

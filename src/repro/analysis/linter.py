@@ -24,9 +24,11 @@ Rules (subjects are ``path:line``; suppress a line with ``# noqa: L-<ID>``):
   - **L-DONATE** (warning): a ``jax.jit`` call without ``donate_argnums``
     in a dispatch-path file — the output allocates new buffers while the
     dead inputs pin theirs, doubling peak memory on the hot path.
-  - **L-NONDET** (warning): nondeterminism hazards inside the event-sim
-    core (``src/repro/core/``) — wall-clock reads or unseeded global
-    randomness break replayable simulation.
+  - **L-NONDET** (warning): nondeterminism hazards inside the
+    determinism-critical trees — the event-sim core (``src/repro/core/``)
+    and the workload plane (``src/repro/workloads/``) — wall-clock reads
+    or unseeded global randomness break replayable simulation and silently
+    change a generated trace's fingerprint between runs.
 
 Detection is lexical ast walking, scoped tight enough to run clean on a
 well-behaved tree: loop-sensitive rules only fire under a ``for`` /
@@ -209,8 +211,10 @@ class _Visitor(ast.NodeVisitor):
                 and (dotted[0], dotted[-1]) in _NONDET_CALLS:
             self._emit(
                 "L-NONDET", Severity.WARNING, node,
-                f"{'.'.join(dotted)}() in the event-sim core: wall-clock "
-                "or unseeded randomness makes simulation unreplayable",
+                f"{'.'.join(dotted)}() in a determinism-critical tree "
+                "(event-sim core / workload plane): wall-clock or unseeded "
+                "randomness makes simulation and trace replay "
+                "unreproducible",
                 "thread a seeded random.Random(seed) / injected clock "
                 "through instead")
 
@@ -228,7 +232,8 @@ def lint_source(source: str, relpath: str) -> list[Diagnostic]:
             f"file does not parse: {e.msg}", hint="fix the syntax error")]
     norm = relpath.replace(os.sep, "/")
     v = _Visitor(norm,
-                 in_core="repro/core/" in norm,
+                 in_core="repro/core/" in norm
+                 or "repro/workloads/" in norm,
                  is_jax_file=_imports_jax(tree))
     v.visit(tree)
     lines = source.splitlines()

@@ -164,5 +164,16 @@ class Platform:
     def run(self, **kw) -> None:
         self.backend.run(**kw)
 
+    def drive(self, trace, **driver_kw):
+        """Replay a :class:`repro.workloads.Trace` onto this platform and
+        return the :class:`repro.workloads.DriveResult` — the one-call
+        path from a sealed scenario to per-tenant counters.  Keyword
+        arguments pass through to :class:`repro.workloads.TraceDriver`
+        (``params=``, ``chain_map=``, ``max_new=``)."""
+        # local import: the workload plane imports repro.api for the DAG
+        # builder, so importing it lazily here breaks the cycle
+        from repro.workloads import TraceDriver
+        return TraceDriver(self, **driver_kw).drive(trace)
+
     def report(self) -> PlatformReport:
         return self.backend.report()

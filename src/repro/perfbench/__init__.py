@@ -1,0 +1,32 @@
+"""perfbench: the cross-commit performance-regression gate.
+
+Three layers over the repo's ``BENCH_*.json`` snapshot convention:
+
+- :mod:`~repro.perfbench.metrics` — flatten any snapshot into dotted-
+  path numeric series (lists = repeats) with per-metric mean/CV;
+- :mod:`~repro.perfbench.compare` — the variance-aware gate: a metric
+  regresses only when its bad-direction delta exceeds
+  ``max(threshold, k * cv)``, so noise earns a wider gate and a real
+  slowdown still fails;
+- :mod:`~repro.perfbench.trajectory` + :mod:`~repro.perfbench.bisect` —
+  the append-only ``BENCH_trajectory.json`` ledger and threshold-based
+  ``good..bad`` bisection that re-runs a named smoke bench per probe.
+
+CLI: ``python -m repro.perfbench {compare,run,bisect}`` (see
+``__main__``); ``benchmarks/compare.py`` is a repo-root shim onto the
+same entry point.
+"""
+from .bisect import bisect_first_bad, list_commits  # noqa: F401
+from .compare import (CompareResult, MetricDelta,  # noqa: F401
+                      compare, direction, format_report)
+from .metrics import Stat, flatten, load_snapshot, metric_stats  # noqa: F401
+from .trajectory import (append_entry, current_commit,  # noqa: F401
+                         load_trajectory)
+
+__all__ = [
+    "Stat", "flatten", "load_snapshot", "metric_stats",
+    "compare", "direction", "CompareResult", "MetricDelta",
+    "format_report",
+    "append_entry", "current_commit", "load_trajectory",
+    "bisect_first_bad", "list_commits",
+]

@@ -1,0 +1,218 @@
+"""perfbench: metric flattening, the variance gate, ledger, bisection.
+
+The ISSUE-10 acceptance criteria live here in controlled form: compare
+exits clean on an unchanged snapshot (and on repeat noise inside the
+variance gate) and fails on a synthetic 2x slowdown; bisect finds the
+first bad commit with a stubbed probe; the trajectory ledger appends
+and stays bounded.
+"""
+from __future__ import annotations
+
+import copy
+import json
+
+import pytest
+
+from repro.perfbench import (Stat, bisect_first_bad, compare, direction,
+                             flatten, format_report, load_trajectory,
+                             metric_stats)
+from repro.perfbench.trajectory import append_entry
+
+SNAP = {
+    "bench": "toy", "mode": "smoke",
+    "sweep": [{"batch": 64, "pkts_per_s": 1000.0, "gbps": 0.5},
+              {"batch": 256, "pkts_per_s": 4000.0, "gbps": 2.0}],
+    "latency": {"p99_us": 120.0},
+    "drops": 0,
+    "_seconds": 3.2,
+    "fingerprint": "abcd",
+}
+
+
+# ================================================================= metrics ==
+
+class TestMetrics:
+    def test_flatten_paths_and_underscore_skip(self):
+        flat = flatten(SNAP)
+        assert flat["sweep.0.pkts_per_s"] == [1000.0]
+        assert flat["latency.p99_us"] == [120.0]
+        assert "_seconds" not in flat
+        assert "bench" not in flat          # strings are not metrics
+
+    def test_list_leaves_become_repeat_samples(self):
+        flat = flatten({"x": {"pkts_per_s": [10.0, 12.0, 11.0]}})
+        assert flat["x.pkts_per_s"] == [10.0, 12.0, 11.0]
+
+    def test_repeats_envelope_pools_per_metric(self):
+        env = {"bench": "toy",
+               "repeats": [{"pkts_per_s": 10.0}, {"pkts_per_s": 12.0}]}
+        stats = metric_stats([env])
+        assert stats["pkts_per_s"].n == 2
+        assert stats["pkts_per_s"].mean == pytest.approx(11.0)
+
+    def test_stat_cv(self):
+        s = Stat.of([10.0, 12.0, 11.0])
+        assert s.cv == pytest.approx(0.0909, abs=1e-3)
+        assert Stat.of([5.0]).cv == 0.0
+
+
+# =============================================================== direction ==
+
+class TestDirection:
+    def test_classification(self):
+        assert direction("sweep.0.pkts_per_s") == "higher"
+        assert direction("latency.p99_us") == "lower"
+        assert direction("run.recovery_epochs") == "lower"
+        assert direction("cache.distinct_buckets") == "info"
+
+    def test_longest_fragment_wins(self):
+        # 'drops_ratio' must gate as a drop count (lower), not a ratio
+        assert direction("tenant.drops") == "lower"
+
+
+# ================================================================= compare ==
+
+class TestCompare:
+    def test_identical_snapshots_pass(self):
+        res = compare([SNAP], [copy.deepcopy(SNAP)])
+        assert res.passed and not res.regressions
+
+    def test_synthetic_2x_slowdown_fails(self):
+        slow = copy.deepcopy(SNAP)
+        for row in slow["sweep"]:
+            row["pkts_per_s"] /= 2.0
+        res = compare([SNAP], [slow])
+        assert not res.passed
+        assert {d.path for d in res.regressions} == {
+            "sweep.0.pkts_per_s", "sweep.1.pkts_per_s"}
+
+    def test_latency_rise_fails_latency_drop_improves(self):
+        worse = copy.deepcopy(SNAP)
+        worse["latency"]["p99_us"] = 200.0
+        assert not compare([SNAP], [worse]).passed
+        better = copy.deepcopy(SNAP)
+        better["latency"]["p99_us"] = 60.0
+        res = compare([SNAP], [better])
+        assert res.passed
+        assert [d.path for d in res.improvements] == ["latency.p99_us"]
+
+    def test_variance_gate_absorbs_noise(self):
+        """A 20% delta on a metric whose repeats carry 10% CV passes at
+        k=3 (gate 30%), and fails with the variance gate disabled."""
+        base = {"repeats": [{"pkts_per_s": v} for v in
+                            (900.0, 1000.0, 1100.0)]}
+        cand = {"repeats": [{"pkts_per_s": v} for v in
+                            (700.0, 800.0, 900.0)]}
+        assert compare([base], [cand], threshold=0.10, k=3.0).passed
+        assert not compare([base], [cand], threshold=0.10, k=0.0).passed
+
+    def test_only_and_skip_filters(self):
+        slow = copy.deepcopy(SNAP)
+        for row in slow["sweep"]:
+            row["pkts_per_s"] /= 2.0
+        assert compare([SNAP], [slow], skip=["sweep"]).passed
+        assert compare([SNAP], [slow], only=["latency*"]).passed
+        assert not compare([SNAP], [slow], only=["sweep*"]).passed
+
+    def test_missing_and_new_metrics_reported_not_gating(self):
+        cand = copy.deepcopy(SNAP)
+        del cand["latency"]
+        cand["extra"] = {"pkts_per_s": 5.0}
+        res = compare([SNAP], [cand])
+        assert res.passed
+        assert res.only_base == ["latency.p99_us"]
+        assert res.only_cand == ["extra.pkts_per_s"]
+
+    def test_format_report_names_verdict(self):
+        slow = copy.deepcopy(SNAP)
+        slow["sweep"][0]["pkts_per_s"] /= 2.0
+        text = format_report(compare([SNAP], [slow]))
+        assert "REGRESSED" in text and "FAIL" in text
+
+
+# ============================================================== trajectory ==
+
+class TestTrajectory:
+    def test_append_and_bound(self, tmp_path):
+        ledger = tmp_path / "BENCH_trajectory.json"
+        for i in range(5):
+            append_entry(ledger, bench="toy", snapshot=SNAP,
+                         commit=f"c{i}", keep=3)
+        data = load_trajectory(ledger)
+        assert [e["commit"] for e in data["entries"]] == ["c2", "c3", "c4"]
+        assert data["entries"][-1]["metrics"]["latency.p99_us"] == 120.0
+
+    def test_verdict_recorded(self, tmp_path):
+        ledger = tmp_path / "t.json"
+        res = compare([SNAP], [copy.deepcopy(SNAP)])
+        entry = append_entry(ledger, bench="toy", snapshot=SNAP,
+                             verdict=res.to_dict(), commit="x")
+        assert entry["verdict"]["pass"] is True
+
+
+# ================================================================== bisect ==
+
+class TestBisect:
+    COMMITS = [f"c{i}" for i in range(10)]
+
+    def test_finds_first_bad(self):
+        for first_bad in range(1, 10):
+            probe = lambda c: int(c[1:]) < first_bad  # noqa: E731
+            found, probes = bisect_first_bad(self.COMMITS, probe)
+            assert found == f"c{first_bad}"
+            assert probes <= 4              # log2(10) rounds
+
+    def test_endpoint_verification(self):
+        with pytest.raises(ValueError, match="already bad"):
+            bisect_first_bad(self.COMMITS, lambda c: False,
+                             assume_endpoints=False)
+        with pytest.raises(ValueError, match="still good"):
+            bisect_first_bad(self.COMMITS, lambda c: True,
+                             assume_endpoints=False)
+
+    def test_probe_gates_with_compare(self, tmp_path):
+        """make_bench_probe with an injected runner: commits at/after the
+        regression return a slowed snapshot and must probe bad."""
+        from repro.perfbench.bisect import make_bench_probe
+        baseline = tmp_path / "base.json"
+        baseline.write_text(json.dumps(SNAP))
+
+        def runner(commit, workdir):
+            snap = copy.deepcopy(SNAP)
+            if int(commit[1:]) >= 6:
+                for row in snap["sweep"]:
+                    row["pkts_per_s"] /= 2.0
+            return snap
+
+        probe = make_bench_probe("toy", baseline, runner=runner,
+                                 log=lambda s: None)
+        found, _ = bisect_first_bad(self.COMMITS, probe)
+        assert found == "c6"
+
+
+# ===================================================================== CLI ==
+
+class TestCli:
+    def test_compare_exit_codes(self, tmp_path):
+        from repro.perfbench.__main__ import main
+        base = tmp_path / "base.json"
+        base.write_text(json.dumps(SNAP))
+        same = tmp_path / "same.json"
+        same.write_text(json.dumps(SNAP))
+        slow_snap = copy.deepcopy(SNAP)
+        for row in slow_snap["sweep"]:
+            row["pkts_per_s"] /= 2.0
+        slow = tmp_path / "slow.json"
+        slow.write_text(json.dumps(slow_snap))
+        ledger = tmp_path / "traj.json"
+
+        assert main(["compare", str(base), str(same),
+                     "--trajectory", str(ledger), "--bench", "toy"]) == 0
+        assert main(["compare", str(base), str(slow)]) == 1
+        assert main(["compare", str(base), str(tmp_path / "nope.json")]) \
+            == 2
+        assert len(load_trajectory(ledger)["entries"]) == 1
+
+    def test_run_rejects_unknown_bench(self):
+        from repro.perfbench.__main__ import main
+        assert main(["run", "no_such_bench"]) == 2

@@ -1,0 +1,280 @@
+"""Workload plane: sealed traces, seeded generation, portable replay.
+
+The contracts under test are the ISSUE-10 acceptance criteria: a trace
+regenerates bit-identically from its seed, round-trips through a dict,
+compiles its churn onto the fault plane, and replays onto different
+substrates with identical arrival schedules and per-epoch census.
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.api import ComputeBackend, Platform, SimBackend
+from repro.api.compute_backend import VPC_SPECS
+from repro.workloads import (Trace, TraceDriver, TraceTenant, clip,
+                             constant, diurnal, flash_crowd, generate,
+                             mmpp, onoff, pareto_sizes, sample_poisson,
+                             zipf_weights)
+
+SMALL = dict(seed=7, epochs=8, n_tenants=5,
+             arrival=diurnal(mean=4.0, period=8), churn_frac=0.4)
+
+
+def small_trace(name="small", **over):
+    return generate(name, **{**SMALL, **over})
+
+
+# ================================================================ arrivals ==
+
+class TestArrivals:
+    def test_composition_superposes_and_modulates(self):
+        shape = constant(10) + flash_crowd(at=4, magnitude=20, width=2)
+        assert shape(0) == 10.0
+        assert shape(4) == 30.0
+        scaled = 2 * constant(3)
+        assert scaled(0) == 6.0
+
+    def test_diurnal_peaks_at_phase_and_validates(self):
+        d = diurnal(mean=10, amplitude=0.5, period=8, phase=2)
+        assert d(2) == pytest.approx(15.0)
+        assert d(6) == pytest.approx(5.0)
+        with pytest.raises(ValueError):
+            diurnal(mean=1, amplitude=1.5)
+
+    def test_flash_crowd_is_zero_before_onset_and_decays(self):
+        f = flash_crowd(at=5, magnitude=100, width=1.0)
+        assert f(4) == 0.0
+        assert f(5) == 100.0
+        assert f(6) == pytest.approx(50.0)
+
+    def test_onoff_square_wave(self):
+        o = onoff(rate_on=7, on=2, off=2)
+        assert [o(e) for e in range(5)] == [7, 7, 0, 0, 7]
+
+    def test_mmpp_state_path_is_sealed_at_construction(self):
+        a = mmpp([1.0, 50.0], dwell=3, horizon=32, seed=4)
+        b = mmpp([1.0, 50.0], dwell=3, horizon=32, seed=4)
+        assert [a(e) for e in range(32)] == [b(e) for e in range(32)]
+        assert {a(e) for e in range(32)} == {1.0, 50.0}
+
+    def test_clip_bounds_composed_rate(self):
+        c = clip(constant(100), hi=5.0)
+        assert c(0) == 5.0
+
+    def test_sample_poisson_seeded_and_zero_rate(self):
+        assert sample_poisson(random.Random(1), 0.0) == 0
+        a = [sample_poisson(random.Random(9), 6.0) for _ in range(4)]
+        b = [sample_poisson(random.Random(9), 6.0) for _ in range(4)]
+        assert a == b
+        big = sample_poisson(random.Random(2), 500.0)
+        assert 300 < big < 700          # normal-approx branch, sane scale
+
+
+# ============================================================== population ==
+
+class TestPopulation:
+    def test_zipf_weights_mean_one_and_skewed(self):
+        w = zipf_weights(16)
+        assert sum(w) / len(w) == pytest.approx(1.0, abs=1e-4)
+        assert w[0] > w[-1]
+
+    def test_pareto_sizes_bounded(self):
+        sizes = pareto_sizes(random.Random(3), 200, lo=200, hi=1500)
+        assert all(200 <= s <= 1500 for s in sizes)
+        assert min(sizes) < 400          # the mass sits near lo
+
+
+# =================================================================== trace ==
+
+class TestTrace:
+    def test_double_generation_fingerprint_identical(self):
+        assert small_trace().fingerprint() == small_trace().fingerprint()
+
+    def test_different_seed_changes_fingerprint(self):
+        assert small_trace().fingerprint() != \
+            small_trace(seed=8).fingerprint()
+
+    def test_dict_round_trip_lossless(self):
+        tr = small_trace()
+        rt = Trace.from_dict(tr.to_dict())
+        assert rt.fingerprint() == tr.fingerprint()
+        assert rt.events == tr.events
+        assert rt.tenants == tr.tenants
+
+    def test_tenant_validation(self):
+        with pytest.raises(ValueError):
+            TraceTenant("x", leave_epoch=1, join_epoch=1)
+        with pytest.raises(ValueError):
+            TraceTenant("x", chain=())
+
+    def test_census_respects_join_and_leave(self):
+        tr = Trace("t", seed=0, epochs=6, tenants=[
+            TraceTenant("a"), TraceTenant("b", join_epoch=2),
+            TraceTenant("c", join_epoch=1, leave_epoch=4)])
+        assert tr.census(0) == ["a"]
+        assert tr.census(2) == ["a", "b", "c"]
+        assert tr.census(4) == ["a", "b"]
+
+    def test_fault_plan_compiles_churn(self):
+        tr = small_trace()
+        plan = tr.fault_plan()
+        adds = {(e.tenant, e.epoch) for e in plan.events
+                if e.kind == "add_tenant"}
+        rems = {(e.tenant, e.epoch) for e in plan.events
+                if e.kind == "remove_tenant"}
+        assert adds == {(t.name, t.join_epoch) for t in tr.tenants
+                        if t.join_epoch > 0}
+        assert rems == {(t.name, t.leave_epoch) for t in tr.tenants
+                        if t.leave_epoch is not None}
+        assert adds or rems              # churn_frac=0.4 must churn someone
+
+    def test_fault_plan_merges_into_base_keeping_seed(self):
+        from repro.faults import FaultPlan
+        base = FaultPlan(seed=99).crash(0, epoch=3)
+        plan = small_trace().fault_plan(base=base)
+        assert plan is base and plan.seed == 99
+        assert any(e.kind == "crash" for e in plan.events)
+        assert any(e.kind in ("add_tenant", "remove_tenant")
+                   for e in plan.events)
+
+    def test_fault_plan_events_reach_a_tenancy(self):
+        """The compiled plan drives the fleet's churn hooks verbatim."""
+        from repro.faults import FaultInjector
+
+        class Recorder:
+            def __init__(self):
+                self.log = []
+
+            def add_tenant(self, tenant, weight):
+                self.log.append(("add", tenant, weight))
+
+            def remove_tenant(self, tenant):
+                self.log.append(("remove", tenant))
+
+        tr = small_trace()
+        rec = Recorder()
+        inj = FaultInjector(tr.fault_plan(), shards=[SimBackend(seed=1)],
+                            tenancy=rec)
+        for e in range(tr.epochs + 1):
+            inj.advance(e)
+        got_adds = {t for kind, t, *_ in rec.log if kind == "add"}
+        got_rems = {t for kind, t, *_ in rec.log if kind == "remove"}
+        assert got_adds == {t.name for t in tr.tenants if t.join_epoch > 0}
+        assert got_rems == {t.name for t in tr.tenants
+                            if t.leave_epoch is not None}
+
+
+# ================================================================== driver ==
+
+class TestDriver:
+    def test_sim_replay_serves_everything(self):
+        tr = small_trace()
+        res = Platform(SimBackend(seed=3), specs=VPC_SPECS).drive(tr)
+        assert res.backend == "sim"
+        assert res.trace_fingerprint == tr.fingerprint()
+        assert sum(res.served.values()) == sum(res.injected.values()) \
+            == tr.total_pkts
+
+    def test_double_replay_identical(self):
+        tr = small_trace()
+        r1 = Platform(SimBackend(seed=3), specs=VPC_SPECS).drive(tr)
+        r2 = Platform(SimBackend(seed=3), specs=VPC_SPECS).drive(tr)
+        assert r1.schedule_fingerprint == r2.schedule_fingerprint
+        assert r1.census == r2.census
+        assert r1.counters() == r2.counters()
+
+    def test_sim_vs_compute_schedule_and_census_identical(self):
+        """The ISSUE-10 portability criterion, sim vs compute batch."""
+        tr = small_trace(epochs=4, n_tenants=3,
+                         arrival=constant(2.0), churn_frac=0.0)
+        r_sim = Platform(SimBackend(seed=3), specs=VPC_SPECS).drive(tr)
+        r_cmp = Platform(ComputeBackend(), specs=VPC_SPECS).drive(tr)
+        assert r_sim.schedule_fingerprint == r_cmp.schedule_fingerprint
+        assert r_sim.census == r_cmp.census
+        assert r_sim.injected == r_cmp.injected
+
+    def test_churn_removes_tenant_from_backend(self):
+        tr = Trace("churn", seed=1, epochs=4, tenants=[
+            TraceTenant("stay", pkt_bytes=500),
+            TraceTenant("brief", pkt_bytes=500, join_epoch=1,
+                        leave_epoch=3)],
+            events=[(0, "stay", 2), (1, "brief", 2), (3, "stay", 1)])
+        plat = Platform(SimBackend(seed=3), specs=VPC_SPECS)
+        res = plat.drive(tr)
+        assert "brief" not in plat.tenants          # departed at epoch 3
+        assert "stay" in plat.tenants
+        assert res.census[1] == ["brief", "stay"]
+        assert res.census[3] == ["stay"]
+
+    def test_unknown_backend_rejected(self):
+        class Weird:
+            pass
+
+        plat = Platform(SimBackend(), specs=VPC_SPECS)
+        plat.backend = Weird()
+        with pytest.raises(TypeError, match="classify"):
+            TraceDriver(plat).kind
+
+
+# ============================================================== invariants ==
+
+@pytest.mark.invariants
+class TestTraceInvariant:
+    def test_i_trace_clean_on_faithful_double_replay(self):
+        from repro.analysis.invariants import check_trace
+        tr = small_trace()
+        r1 = Platform(SimBackend(seed=3), specs=VPC_SPECS).drive(tr)
+        r2 = Platform(SimBackend(seed=3), specs=VPC_SPECS).drive(tr)
+        check_trace(r1, r2, "test/small")        # must not raise
+
+    def test_i_trace_catches_counter_divergence(self):
+        from repro.analysis.invariants import (InvariantViolation,
+                                               check_trace)
+        tr = small_trace()
+        r1 = Platform(SimBackend(seed=3), specs=VPC_SPECS).drive(tr)
+        r2 = Platform(SimBackend(seed=3), specs=VPC_SPECS).drive(tr)
+        r2.served[next(iter(r2.served))] += 1
+        with pytest.raises(InvariantViolation, match="I-TRACE"):
+            check_trace(r1, r2, "test/diverged")
+
+    def test_i_trace_catches_trace_mismatch(self):
+        from repro.analysis.invariants import (InvariantViolation,
+                                               check_trace)
+        r1 = Platform(SimBackend(seed=3),
+                      specs=VPC_SPECS).drive(small_trace())
+        r2 = Platform(SimBackend(seed=3),
+                      specs=VPC_SPECS).drive(small_trace(seed=8))
+        with pytest.raises(InvariantViolation, match="different traces"):
+            check_trace(r1, r2, "test/mismatch")
+
+
+# ================================================================== linter ==
+
+class TestLinterScope:
+    NONDET_SRC = ("import random\n"
+                  "def gen():\n"
+                  "    return random.random()\n")
+
+    def test_l_nondet_covers_workloads_tree(self):
+        from repro.analysis.linter import lint_source
+        diags = lint_source(self.NONDET_SRC,
+                            "src/repro/workloads/bad.py")
+        assert any(d.rule == "L-NONDET" for d in diags)
+
+    def test_l_nondet_still_covers_core_and_not_api(self):
+        from repro.analysis.linter import lint_source
+        assert any(d.rule == "L-NONDET" for d in lint_source(
+            self.NONDET_SRC, "src/repro/core/bad.py"))
+        assert not any(d.rule == "L-NONDET" for d in lint_source(
+            self.NONDET_SRC, "src/repro/api/fine.py"))
+
+    def test_shipped_workloads_tree_is_lint_clean(self):
+        from pathlib import Path
+
+        from repro.analysis.linter import lint_paths
+        root = Path(__file__).resolve().parents[1]
+        tree = root / "src" / "repro" / "workloads"
+        diags = lint_paths([str(tree)], root=str(root))
+        assert [d for d in diags if d.rule == "L-NONDET"] == []

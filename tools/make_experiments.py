@@ -144,7 +144,14 @@ def roofline_section() -> str:
 
 
 def bench_section() -> str:
+    """Figure sweeps from experiments/bench/ plus the canonical repo-root
+    BENCH_*.json snapshots (the single source of truth benchmarks/run.py
+    maintains; nested sections render as their scalar headline keys)."""
     recs = load(BENCH)
+    for fn in sorted(ROOT.glob("BENCH_*.json")):
+        if fn.stem == "BENCH_trajectory":
+            continue            # the ledger is an artifact, not a figure
+        recs[fn.stem] = json.loads(fn.read_text())
     lines = ["## §Paper-figure reproduction (benchmarks/run.py)", ""]
     for key in sorted(recs):
         r = recs[key]
@@ -153,7 +160,7 @@ def bench_section() -> str:
         lines.append("| metric | value |")
         lines.append("|---|---|")
         for k, v in r.items():
-            if k.startswith("_"):
+            if k.startswith("_") or isinstance(v, (list, dict)):
                 continue
             lines.append(f"| {k} | {v} |")
         lines.append("")
